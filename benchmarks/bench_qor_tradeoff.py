@@ -1,0 +1,62 @@
+"""Paper Fig. 10: utility-based vs content-agnostic shedding.
+
+(a) target drop rate -> observed drop rate + QoR (utility-based via the
+    CDF threshold mapping);
+(b) same for uniform-random shedding (20 trials);
+(c) the QoR-vs-observed-drop-rate tradeoff of both.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RED, UtilityCDF, overall_qor, train_utility_model
+from repro.data.synthetic import combined_objects
+from benchmarks.common import Timer, dataset, records, train_model
+
+
+def run(quick=True):
+    streams = records(4 if quick else 8, 240 if quick else 600, ("red",))
+    test_idx = len(streams) - 1
+    train_recs = [r for i, s in enumerate(streams) if i != test_idx for r in s]
+    test_recs = streams[test_idx]
+    model = train_model(train_recs, [RED])
+    train_us = [float(model.score(r.pf)) for r in train_recs]
+    test_us = np.asarray([float(model.score(r.pf)) for r in test_recs])
+    objs = [r.objects for r in test_recs]
+    cdf = UtilityCDF(train_us)
+    rng = np.random.default_rng(0)
+
+    util_rows, rand_rows = [], []
+    with Timer() as t:
+        for r in np.linspace(0, 0.95, 20):
+            th = cdf.threshold_for_drop_rate(float(r))
+            kept = test_us >= th
+            util_rows.append({
+                "target": float(r),
+                "observed": float(1 - kept.mean()),
+                "qor": overall_qor(objs, kept)})
+            qs, obs = [], []
+            for _ in range(20):
+                keep_mask = rng.random(len(test_recs)) >= r
+                qs.append(overall_qor(objs, keep_mask))
+                obs.append(1 - keep_mask.mean())
+            rand_rows.append({"target": float(r),
+                              "observed": float(np.mean(obs)),
+                              "qor": float(np.mean(qs))})
+
+    # area-under-curve of QoR vs observed drop rate (higher = better)
+    def auc(rows):
+        xs = [r["observed"] for r in rows]
+        ys = [r["qor"] for r in rows]
+        o = np.argsort(xs)
+        return float(np.trapezoid(np.asarray(ys)[o], np.asarray(xs)[o]))
+
+    return {"us_per_call": t.us,
+            "derived": {"auc_utility": auc(util_rows),
+                        "auc_random": auc(rand_rows)},
+            "utility": util_rows, "random": rand_rows}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

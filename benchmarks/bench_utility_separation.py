@@ -1,0 +1,74 @@
+"""Paper Fig. 9 / 11 / 12: cross-validated utility separation and
+QoR/drop-rate vs utility threshold, for RED, RED-OR-YELLOW and
+RED-AND-YELLOW queries."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import COLORS, overall_qor, train_utility_model
+from repro.data.pipeline import features_from_hsv
+from repro.data.background import batch_foreground
+from repro.data.synthetic import combined_label, combined_objects
+from benchmarks.common import Timer, dataset
+
+
+def _features(sc, colors):
+    fg = batch_foreground(sc.frames_hsv)
+    return features_from_hsv(sc.frames_hsv, colors, fg)
+
+
+def crossval(colors, op, quick=True):
+    names = [c.name for c in colors]
+    scs = dataset(4 if quick else 8, 240 if quick else 600)
+    feats = [_features(sc, colors) for sc in scs]
+    per_color_labels = [np.stack([sc.labels[n] for n in names], 1)
+                        for sc in scs]
+    rows = []
+    all_pos, all_neg = [], []
+    for ti in range(len(scs)):
+        train_pf = np.concatenate([f for i, f in enumerate(feats) if i != ti])
+        train_lab = np.concatenate([l for i, l in enumerate(per_color_labels)
+                                    if i != ti])
+        model = train_utility_model(train_pf, train_lab, colors, op=op)
+        us = np.asarray([float(model.score(pf)) for pf in feats[ti]])
+        lab = combined_label(scs[ti], names, op)
+        if lab.any():
+            all_pos.extend(us[lab])
+        all_neg.extend(us[~lab])
+        objs = combined_objects(scs[ti], names)
+        for th in np.linspace(0, 1, 21):
+            kept = us >= th
+            rows.append({"video": ti, "threshold": float(th),
+                         "drop_rate": float(1 - kept.mean()),
+                         "qor": overall_qor(objs, kept)})
+    return np.asarray(all_pos), np.asarray(all_neg), rows
+
+
+def run(quick=True):
+    out = {}
+    with Timer() as t:
+        for key, colors, op in [("red", ["red"], "single"),
+                                ("red_or_yellow", ["red", "yellow"], "or"),
+                                ("red_and_yellow", ["red", "yellow"], "and")]:
+            pos, neg, rows = crossval([COLORS[c] for c in colors], op, quick)
+            agg = {}
+            for th in sorted({r["threshold"] for r in rows}):
+                sel = [r for r in rows if r["threshold"] == th]
+                agg[round(th, 3)] = {
+                    "drop_rate": float(np.mean([r["drop_rate"] for r in sel])),
+                    "qor": float(np.mean([r["qor"] for r in sel]))}
+            out[key] = {
+                "u_pos_mean": float(pos.mean()) if len(pos) else None,
+                "u_neg_mean": float(neg.mean()),
+                "separation_ratio": (float(pos.mean() / max(neg.mean(), 1e-9))
+                                     if len(pos) else None),
+                "sweep": agg,
+            }
+    return {"us_per_call": t.us, "derived": {
+        k: {"separation_ratio": v["separation_ratio"]} for k, v in out.items()},
+        "full": out}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

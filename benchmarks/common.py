@@ -1,0 +1,57 @@
+"""Shared benchmark fixtures: dataset + trained utility models, cached
+across benchmark modules within one process."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import RED, YELLOW, train_utility_model
+from repro.data.pipeline import scenario_records
+from repro.data.synthetic import generate_dataset
+
+FPS = 10.0
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(n_videos: int = 8, frames: int = 300, h: int = 48, w: int = 80):
+    return tuple(generate_dataset(range(n_videos), num_frames=frames,
+                                  height=h, width=w))
+
+
+@functools.lru_cache(maxsize=8)
+def records(n_videos=8, frames=300, colors=("red",), op="or"):
+    from repro.core.colors import COLORS
+    cs = [COLORS[c] for c in colors]
+    scs = dataset(n_videos, frames)
+    return tuple(tuple(scenario_records(s, i, cs, op=op, fps=FPS))
+                 for i, s in enumerate(scs))
+
+
+def crossval_split(streams, test_idx):
+    test = streams[test_idx]
+    train = [r for i, s in enumerate(streams) if i != test_idx for r in s]
+    return train, test
+
+
+def train_model(train_recs, colors, op="single"):
+    pfs = np.stack([r.pf for r in train_recs])
+    if len(colors) == 1:
+        labels = np.array([r.label for r in train_recs])
+    else:
+        labels = np.array([r.label for r in train_recs])
+    return train_utility_model(pfs, labels, colors, op=op)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.dt * 1e6

@@ -1,0 +1,88 @@
+"""Aggregate dry-run JSONs into the roofline table (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json produced by repro.launch.dryrun and emits a
+markdown/CSV table of the three roofline terms per (arch x shape x mesh),
+the dominant term, MODEL_FLOPS/HLO_FLOPs, and memory fit.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+HBM_PER_CHIP = 16 * 2 ** 30    # v5e: 16 GiB
+
+
+def load(outdir="results/dryrun", mesh="single", tag=None):
+    rows = []
+    for p in sorted(Path(outdir).glob("*.json")):
+        if p.name.endswith(".error.json"):
+            continue
+        parts = p.stem.split("--")
+        # <arch>--<shape>--<mesh>[--<tag>]
+        if len(parts) < 3:
+            continue
+        r = json.loads(p.read_text())
+        file_mesh = parts[2]
+        file_tag = parts[3] if len(parts) > 3 else None
+        if file_mesh != mesh or file_tag != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(rows, fmt="md"):
+    hdr = ["arch", "shape", "fits", "peakGiB", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful_ratio", "roofline_frac"]
+    lines = []
+    if fmt == "md":
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for r in rows:
+        if "skipped" in r:
+            row = [r["arch"], r["shape"], "skip", "-", "-", "-", "-",
+                   r["skipped"][:30], "-", "-"]
+        elif "error" in r:
+            row = [r["arch"], r["shape"], "ERR", "-", "-", "-", "-",
+                   r["error"][:30], "-", "-"]
+        else:
+            t = r["roofline"]
+            peak = r["memory"]["peak_bytes_est"]
+            row = [r["arch"], r["shape"],
+                   "Y" if peak <= HBM_PER_CHIP else "N",
+                   f"{peak/2**30:.1f}",
+                   f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+                   f"{t['collective_s']:.4f}", t["dominant"].replace("_s", ""),
+                   f"{r['useful_flops_ratio']:.3f}",
+                   f"{t['roofline_fraction']:.3f}"]
+        if fmt == "md":
+            lines.append("| " + " | ".join(str(x) for x in row) + " |")
+        else:
+            lines.append(",".join(str(x) for x in row))
+    return "\n".join(lines)
+
+
+def run(quick=True):
+    rows = load()
+    ok = [r for r in rows if "roofline" in r]
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])[:3]
+    most_coll = sorted(ok, key=lambda r: -r["roofline"]["collective_s"])[:3]
+    return {"us_per_call": 0.0,
+            "derived": {
+                "cells": len(rows),
+                "compiled": len(ok),
+                "fits_hbm": sum(1 for r in ok
+                                if r["memory"]["peak_bytes_est"] <= HBM_PER_CHIP),
+                "worst_roofline": [f"{r['arch']}/{r['shape']}" for r in worst],
+                "most_collective_bound": [f"{r['arch']}/{r['shape']}"
+                                          for r in most_coll],
+            }}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--fmt", default="md")
+    args = ap.parse_args()
+    print(table(load(mesh=args.mesh, tag=args.tag), fmt=args.fmt))

@@ -1,0 +1,57 @@
+"""Benchmark runner — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus saves full JSON to
+results/benchmarks/).
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+from pathlib import Path
+
+BENCHES = [
+    ("fig5_hue_fraction", "benchmarks.bench_hue_fraction"),
+    ("fig9_11_12_utility_separation", "benchmarks.bench_utility_separation"),
+    ("fig10_qor_tradeoff", "benchmarks.bench_qor_tradeoff"),
+    ("fig13a_control_loop", "benchmarks.bench_control_loop"),
+    ("fig13b_14_multicam", "benchmarks.bench_multicam"),
+    ("fig15_overhead", "benchmarks.bench_overhead"),
+    ("roofline_summary", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    outdir = Path("results/benchmarks")
+    outdir.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod_name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            res = mod.run(quick=not args.full)
+            (outdir / f"{name}.json").write_text(json.dumps(res, indent=2))
+            derived = json.dumps(res["derived"], sort_keys=True)
+            print(f'{name},{res["us_per_call"]:.1f},"{derived}"', flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Serve a real JAX model behind the utility-aware Load Shedder.
+
+The backend 'Application Query' is an actual jitted LM forward (the
+paper's EfficientDet slot); the Load Shedder + control loop keep E2E
+latency bounded as ingress exceeds backend throughput.
+
+    PYTHONPATH=src python examples/serve_with_shedding.py --frames 300
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=300)
+    ap.add_argument("--fps", type=float, default=30.0)
+    args = ap.parse_args()
+
+    from repro.launch import serve as S
+    sys.argv = [sys.argv[0], "--frames", str(args.frames),
+                "--fps", str(args.fps), "--real-backend"]
+    S.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end training driver: ~100M-param model, a few hundred steps,
+with checkpointing + fault injection to demonstrate recovery.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+(Use --tiny on very slow hosts.)
+"""
+import argparse
+import shutil
+import sys
+
+sys.argv0 = sys.argv[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CI-speed)")
+    ap.add_argument("--inject-fault", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch import train as T
+
+    argv = ["--arch", "smollm-135m", "--steps", str(args.steps),
+            "--ckpt-dir", "checkpoints/example_train",
+            "--ckpt-every", "50"]
+    if args.tiny:
+        argv += ["--smoke", "--batch", "8", "--seq", "64"]
+    else:
+        # full smollm-135m (the ~100M model) at laptop-scale batch
+        argv += ["--batch", "2", "--seq", "128", "--lr", "1e-3"]
+    if args.inject_fault:
+        argv += ["--inject-fault-at", str(args.steps // 2)]
+
+    shutil.rmtree("checkpoints/example_train", ignore_errors=True)
+    sys.argv = [sys.argv0] + argv
+    report = T.main()
+    assert report.steps_run >= args.steps - 1
+    print("example complete — loss curve is in the log above")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_cells,
+    get_config,
+    get_smoke_config,
+    scaled,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "all_cells",
+    "get_config",
+    "get_smoke_config",
+    "scaled",
+]

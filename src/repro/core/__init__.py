@@ -1,0 +1,27 @@
+# The paper's primary contribution: utility-aware load shedding for
+# real-time video analytics (utility function, CDF threshold mapping,
+# control loop, utility-ordered bounded queue, QoR metrics).
+from repro.core.colors import BLUE, COLORS, GREEN, RED, YELLOW, Color
+from repro.core.control import ControlLoop, LatencyInputs
+from repro.core.qor import drop_rate, overall_qor, per_object_qor
+from repro.core.shed_queue import UtilityQueue
+from repro.core.shedder import LoadShedder, ShedderStats
+from repro.core.threshold import UtilityCDF
+from repro.core.utility import (
+    B_S,
+    B_V,
+    UtilityModel,
+    frame_features,
+    hue_fraction,
+    pixel_fraction_matrix,
+    train_utility_model,
+)
+
+__all__ = [
+    "BLUE", "COLORS", "GREEN", "RED", "YELLOW", "Color",
+    "ControlLoop", "LatencyInputs",
+    "drop_rate", "overall_qor", "per_object_qor",
+    "UtilityQueue", "LoadShedder", "ShedderStats", "UtilityCDF",
+    "B_S", "B_V", "UtilityModel", "frame_features", "hue_fraction",
+    "pixel_fraction_matrix", "train_utility_model",
+]

@@ -1,0 +1,84 @@
+"""Utility-ordered bounded queue with dynamic sizing (paper §IV-D).
+
+Second layer of admission control: when the queue is full, the
+lowest-utility frame is evicted (whether resident or incoming); the
+transmission layer always sends the current *best* frame. The queue
+never shrinks below size 1 ("avoid starving the downstream operators").
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+
+@dataclass(order=True)
+class _Entry:
+    utility: float
+    seq: int                      # FIFO tiebreak: prefer older on eviction? paper
+    item: Any = field(compare=False)
+    dropped: bool = field(default=False, compare=False)
+
+
+class UtilityQueue:
+    """Min-heap on utility so eviction of the worst frame is O(log n);
+    pop_best scans lazily via a parallel max-heap."""
+
+    def __init__(self, max_size: int = 8):
+        self._max = max(1, int(max_size))
+        self._min: List[_Entry] = []
+        self._max_heap: List[Tuple[float, int, _Entry]] = []
+        self._counter = itertools.count()
+        self.evictions = 0
+
+    def __len__(self):
+        return sum(1 for e in self._min if not e.dropped)
+
+    @property
+    def max_size(self) -> int:
+        return self._max
+
+    def resize(self, new_size: int) -> List[Any]:
+        """Dynamic queue sizing: shrink drops the lowest-utility frames."""
+        self._max = max(1, int(new_size))
+        dropped = []
+        while len(self) > self._max:
+            dropped.append(self._evict_worst())
+        return dropped
+
+    def push(self, item: Any, utility: float) -> Optional[Any]:
+        """Insert; returns the evicted item (possibly ``item`` itself) or None."""
+        e = _Entry(float(utility), next(self._counter), item)
+        heapq.heappush(self._min, e)
+        heapq.heappush(self._max_heap, (-e.utility, e.seq, e))
+        if len(self) > self._max:
+            self.evictions += 1
+            return self._evict_worst()
+        return None
+
+    def _evict_worst(self) -> Any:
+        while self._min:
+            e = heapq.heappop(self._min)
+            if not e.dropped:
+                e.dropped = True
+                return e.item
+        raise RuntimeError("evict from empty queue")
+
+    def pop_best(self) -> Optional[Any]:
+        while self._max_heap:
+            _, _, e = heapq.heappop(self._max_heap)
+            if not e.dropped:
+                e.dropped = True
+                return e.item
+        return None
+
+    def peek_best_utility(self) -> Optional[float]:
+        while self._max_heap and self._max_heap[0][2].dropped:
+            heapq.heappop(self._max_heap)
+        return -self._max_heap[0][0] if self._max_heap else None
+
+    def min_utility(self) -> Optional[float]:
+        while self._min and self._min[0].dropped:
+            heapq.heappop(self._min)
+        return self._min[0].utility if self._min else None

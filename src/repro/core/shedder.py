@@ -1,0 +1,86 @@
+"""The Load Shedder (paper §IV): utility scoring + two-layer shedding.
+
+Layer 1 (admission control): drop frames whose utility is below the
+dynamic threshold derived from the target drop rate (control.py +
+threshold.py).
+
+Layer 2 (dynamic queue): admitted frames enter a bounded utility-ordered
+queue (shed_queue.py); the queue size tracks the E2E budget, and the
+transmission layer sends the best queued frame whenever the backend
+frees a token.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.core.control import ControlLoop
+from repro.core.shed_queue import UtilityQueue
+from repro.core.threshold import UtilityCDF
+from repro.core.utility import UtilityModel
+
+
+@dataclass
+class ShedderStats:
+    offered: int = 0
+    dropped_admission: int = 0
+    dropped_queue: int = 0
+    sent: int = 0
+
+    @property
+    def dropped(self) -> int:
+        return self.dropped_admission + self.dropped_queue
+
+    def drop_rate(self) -> float:
+        return self.dropped / self.offered if self.offered else 0.0
+
+
+class LoadShedder:
+    def __init__(self, model: Optional[UtilityModel], cdf: UtilityCDF,
+                 control: ControlLoop, queue_size: int = 8,
+                 update_cdf_online: bool = True):
+        self.model = model
+        self.cdf = cdf
+        self.control = control
+        self.queue = UtilityQueue(queue_size)
+        self.threshold = -float("inf")
+        self.stats = ShedderStats()
+        self.update_cdf_online = update_cdf_online
+
+    # -- scoring ------------------------------------------------------------
+    def utility_of(self, pf) -> float:
+        assert self.model is not None, "no utility model configured"
+        return float(self.model.score(pf))
+
+    # -- data path ----------------------------------------------------------
+    def offer(self, item: Any, utility: float) -> str:
+        """Returns 'queued' | 'shed_admission' | 'shed_queue'."""
+        self.stats.offered += 1
+        if self.update_cdf_online:
+            self.cdf.update(utility)
+        if utility < self.threshold:
+            self.stats.dropped_admission += 1
+            return "shed_admission"
+        evicted = self.queue.push(item, utility)
+        if evicted is not None:
+            self.stats.dropped_queue += 1
+            if evicted is item:
+                return "shed_queue"
+        return "queued"
+
+    def next_frame(self) -> Optional[Any]:
+        """Transmission control: called when the backend frees a token."""
+        item = self.queue.pop_best()
+        if item is not None:
+            self.stats.sent += 1
+        return item
+
+    # -- control path -------------------------------------------------------
+    def tick(self):
+        """Re-derive threshold (Eq. 17–19) and queue size (Eq. 20)."""
+        r = self.control.target_drop_rate()
+        self.threshold = self.cdf.threshold_for_drop_rate(r)
+        dropped = self.queue.resize(self.control.queue_size())
+        self.stats.dropped_queue += len(dropped)
+        return {"target_drop_rate": r, "threshold": self.threshold,
+                "queue_size": self.queue.max_size}

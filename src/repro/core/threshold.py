@@ -1,0 +1,67 @@
+"""Target-drop-rate -> utility-threshold mapping (paper §IV-C, Eq. 16–17).
+
+A sliding window of recent frame utilities approximates the utility CDF;
+the threshold for target drop rate r is the smallest utility u_th with
+CDF(u_th) >= r. The window is seeded from the training set and updated
+online so the mapping tracks content drift.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+class UtilityCDF:
+    def __init__(self, history: Optional[Iterable[float]] = None,
+                 window: int = 4096):
+        self._buf = deque(maxlen=window)
+        if history is not None:
+            for u in history:
+                self._buf.append(float(u))
+        self._sorted: Optional[np.ndarray] = None
+
+    def __len__(self):
+        return len(self._buf)
+
+    def update(self, utilities):
+        us = np.atleast_1d(np.asarray(utilities, np.float64))
+        for u in us:
+            self._buf.append(float(u))
+        self._sorted = None
+
+    def _view(self) -> np.ndarray:
+        if self._sorted is None:
+            self._sorted = np.sort(np.asarray(self._buf, np.float64))
+        return self._sorted
+
+    def cdf(self, u: float) -> float:
+        """Eq. 16: fraction of history with utility <= u."""
+        v = self._view()
+        if len(v) == 0:
+            return 0.0
+        return float(np.searchsorted(v, u, side="right")) / len(v)
+
+    def threshold_for_drop_rate(self, r: float) -> float:
+        """Eq. 17: min u_th such that CDF(u_th) >= r.
+
+        The shedder drops frames with utility < u_th, so r=0 maps to
+        -inf (shed nothing).
+        """
+        v = self._view()
+        if len(v) == 0 or r <= 0.0:
+            return -np.inf
+        r = min(r, 1.0)
+        idx = int(np.ceil(r * len(v))) - 1
+        idx = max(0, min(idx, len(v) - 1))
+        # drop everything strictly below the next representable utility
+        u = v[idx]
+        return float(np.nextafter(u, np.inf))
+
+    def observed_drop_rate(self, u_th: float) -> float:
+        """Fraction of history that would be dropped at threshold u_th."""
+        v = self._view()
+        if len(v) == 0:
+            return 0.0
+        return float(np.searchsorted(v, u_th, side="left")) / len(v)

@@ -1,0 +1,120 @@
+"""Per-frame utility function (paper §IV-B, Eq. 6–15).
+
+Pipeline: HSV pixels (+ foreground mask) -> per-color pixel-fraction
+matrix PF_C (Eq. 10) -> utility U_C = <M_C,+ve, PF_C> (Eq. 14), where
+M_C,+ve is the mean PF over positive training frames (Eq. 12).
+Composite queries compose *normalized* per-color utilities: OR -> max,
+AND -> min (Eq. 15).
+
+The batched PF computation has a Pallas TPU kernel
+(`repro.kernels.hsv_features`); this module is the pure-jnp oracle and
+the training/runtime logic around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.colors import Color, hue_mask, rgb_to_hsv_jnp
+
+B_S = 8   # saturation bins (paper §V-B: 8x8, bin size 32)
+B_V = 8   # value bins
+
+
+def hue_fraction(hsv, color: Color, fg_mask=None):
+    """Eq. 6: fraction of (foreground) pixels whose hue is in the color."""
+    h = hsv[..., 0]
+    m = hue_mask(h, color)
+    if fg_mask is not None:
+        m = m & fg_mask
+        denom = jnp.sum(fg_mask, axis=(-2, -1))
+    else:
+        denom = h.shape[-1] * h.shape[-2]
+    return jnp.sum(m, axis=(-2, -1)) / jnp.maximum(denom, 1)
+
+
+def pixel_fraction_matrix(hsv, color: Color, fg_mask=None,
+                          bs: int = B_S, bv: int = B_V):
+    """Eq. 9–11: PF matrix for one frame (or batch, leading dims kept).
+
+    hsv: (..., H, W, 3) with channels (hue, sat, val).
+    Returns (..., bs, bv) float32; rows sum to 1 where the frame has any
+    color pixels, all-zero otherwise.
+    """
+    h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]
+    m = hue_mask(h, color)
+    if fg_mask is not None:
+        m = m & fg_mask
+    sb = jnp.clip((s / (256 // bs)).astype(jnp.int32), 0, bs - 1)
+    vb = jnp.clip((v / (256 // bv)).astype(jnp.int32), 0, bv - 1)
+    joint = sb * bv + vb                                        # (..., H, W)
+    onehot = jax.nn.one_hot(joint, bs * bv, dtype=jnp.float32)
+    counts = jnp.sum(onehot * m[..., None].astype(jnp.float32), axis=(-3, -2))
+    total = jnp.sum(m, axis=(-2, -1)).astype(jnp.float32)
+    pf = counts / jnp.maximum(total, 1.0)[..., None]
+    return pf.reshape(*pf.shape[:-1], bs, bv)
+
+
+def frame_features(rgb, colors: Sequence[Color], fg_mask=None,
+                   bs: int = B_S, bv: int = B_V):
+    """RGB frame(s) -> stacked PF matrices (..., n_colors, bs, bv)."""
+    hsv = rgb_to_hsv_jnp(rgb)
+    return jnp.stack([pixel_fraction_matrix(hsv, c, fg_mask, bs, bv)
+                      for c in colors], axis=-3)
+
+
+# ---------------------------------------------------------------------------
+# Utility model: training (Eq. 12–13) and scoring (Eq. 14–15)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class UtilityModel:
+    colors: Tuple[Color, ...]
+    M_pos: np.ndarray        # (n_colors, bs, bv) — Eq. 12
+    M_neg: np.ndarray        # (n_colors, bs, bv) — Eq. 13 (analysis only)
+    norm: np.ndarray         # (n_colors,) max train utility per color
+    op: str = "single"       # single | or | and
+
+    def score(self, pf):
+        """pf: (..., n_colors, bs, bv) -> utility (...,). Eq. 14–15."""
+        M = jnp.asarray(self.M_pos)
+        u = jnp.sum(pf * M[None] if pf.ndim > 3 else pf * M, axis=(-2, -1))
+        u = u / jnp.asarray(np.maximum(self.norm, 1e-9))
+        if self.op == "and":
+            return jnp.min(u, axis=-1)
+        if self.op == "or" or self.op == "single":
+            return jnp.max(u, axis=-1)
+        raise ValueError(self.op)
+
+
+def train_utility_model(pfs, labels, colors: Sequence[Color],
+                        op: str = "single") -> UtilityModel:
+    """pfs: (N, n_colors, bs, bv); labels: (N,) in {0,1}.
+
+    For composite queries the paper trains each color's function on its
+    own positives; here labels may be (N, n_colors) per-color or (N,)
+    shared.
+    """
+    pfs = np.asarray(pfs, np.float32)
+    labels = np.asarray(labels)
+    nc = len(colors)
+    if labels.ndim == 1:
+        labels = np.repeat(labels[:, None], nc, axis=1)
+    M_pos = np.zeros((nc,) + pfs.shape[-2:], np.float32)
+    M_neg = np.zeros_like(M_pos)
+    norm = np.zeros((nc,), np.float32)
+    for ci in range(nc):
+        pos = labels[:, ci] > 0
+        if pos.any():
+            M_pos[ci] = pfs[pos, ci].mean(axis=0)
+        if (~pos).any():
+            M_neg[ci] = pfs[~pos, ci].mean(axis=0)
+        u_train = np.sum(pfs[:, ci] * M_pos[ci], axis=(-2, -1))
+        norm[ci] = float(u_train.max()) if len(u_train) else 1.0
+    return UtilityModel(tuple(colors), M_pos, M_neg, norm,
+                        op if nc > 1 else "single")

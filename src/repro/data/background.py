@@ -1,0 +1,37 @@
+"""Background subtraction (paper §V-F: runs co-located with the camera).
+
+Running-average background model on the Value channel with global-gain
+compensation: a per-frame multiplicative illumination estimate (median
+ratio to the background) is divided out before differencing, so slow
+global lighting drift does not flood the foreground mask. The background
+absorbs everywhere with a small learning rate (moving objects contribute
+negligibly).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class RunningAverageBackground:
+    def __init__(self, alpha: float = 0.05, threshold: float = 18.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self._bg = None  # (H, W) value-channel background
+
+    def __call__(self, hsv_frame: np.ndarray) -> np.ndarray:
+        """hsv_frame: (H, W, 3). Returns bool foreground mask (H, W)."""
+        val = hsv_frame[..., 2].astype(np.float32)
+        if self._bg is None:
+            self._bg = val.copy()
+            return np.zeros(val.shape, bool)   # no evidence yet -> all bg
+        gain = np.median(val) / max(np.median(self._bg), 1e-6)
+        comp = val / max(gain, 1e-6)
+        mask = np.abs(comp - self._bg) > self.threshold
+        self._bg = (1 - self.alpha) * self._bg + self.alpha * comp
+        return mask
+
+
+def batch_foreground(frames_hsv: np.ndarray, alpha=0.05, threshold=18.0):
+    """Apply the running-average model over a (T,H,W,3) sequence."""
+    bg = RunningAverageBackground(alpha, threshold)
+    return np.stack([bg(f) for f in frames_hsv])

@@ -1,0 +1,161 @@
+"""Host-side data pipelines.
+
+Video path (paper Fig. 8): camera-side RGB->HSV + background subtraction
++ PF feature extraction, multi-camera interleaving into one frame-record
+stream for the Load Shedder.
+
+LM path: a seeded synthetic token stream (Zipfian bigram chain — learnable
+structure so example training shows decreasing loss) with double-buffered
+prefetch, sharding-aware device_put, and per-host batching.
+"""
+from __future__ import annotations
+
+import queue as _q
+import threading
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.colors import Color
+from repro.core.utility import pixel_fraction_matrix
+from repro.data.background import batch_foreground
+from repro.data.synthetic import VideoScenario, combined_label, combined_objects
+
+
+# ---------------------------------------------------------------------------
+# Video features
+# ---------------------------------------------------------------------------
+
+def features_from_hsv(frames_hsv: np.ndarray, colors: Sequence[Color],
+                      fg_mask: Optional[np.ndarray] = None,
+                      batch: int = 64) -> np.ndarray:
+    """(T,H,W,3) HSV -> (T, n_colors, 8, 8) PF matrices (numpy)."""
+    T = frames_hsv.shape[0]
+    outs = []
+
+    @jax.jit
+    def one(hsv_b, fg_b):
+        return jnp.stack([pixel_fraction_matrix(hsv_b, c, fg_b)
+                          for c in colors], axis=-3)
+
+    for i in range(0, T, batch):
+        hsv_b = jnp.asarray(frames_hsv[i:i + batch])
+        fg_b = None if fg_mask is None else jnp.asarray(fg_mask[i:i + batch])
+        outs.append(np.asarray(one(hsv_b, fg_b)))
+    return np.concatenate(outs, axis=0)
+
+
+@dataclass
+class FrameRecord:
+    cam_id: int
+    frame_idx: int
+    t_gen: float                 # generation timestamp (seconds)
+    pf: np.ndarray               # (n_colors, 8, 8)
+    label: bool
+    objects: frozenset
+    busy: bool                   # big blob present -> backend runs DNN stage
+    utility: float = float("nan")
+
+
+def scenario_records(sc: VideoScenario, cam_id: int, colors: Sequence[Color],
+                     op: str = "or", fps: float = 10.0,
+                     use_foreground: bool = True,
+                     t0: float = 0.0) -> List[FrameRecord]:
+    names = [c.name for c in colors]
+    fg = batch_foreground(sc.frames_hsv) if use_foreground else None
+    pfs = features_from_hsv(sc.frames_hsv, colors, fg)
+    labels = combined_label(sc, names, op)
+    objs = combined_objects(sc, names)
+    return [FrameRecord(cam_id, t, t0 + t / fps, pfs[t], bool(labels[t]),
+                        frozenset(objs[t]), bool(sc.busy[t]))
+            for t in range(sc.num_frames)]
+
+
+def interleave_streams(per_cam_records: Sequence[List[FrameRecord]]
+                       ) -> List[FrameRecord]:
+    """Merge multi-camera streams by generation time (paper §V-E2)."""
+    allr = [r for rs in per_cam_records for r in rs]
+    return sorted(allr, key=lambda r: (r.t_gen, r.cam_id, r.frame_idx))
+
+
+# ---------------------------------------------------------------------------
+# LM token pipeline
+# ---------------------------------------------------------------------------
+
+class BigramStream:
+    """Zipfian bigram-chain language: P(next | cur) concentrated on a few
+    successors, so cross-entropy is learnable well below ln(V)."""
+
+    def __init__(self, vocab: int, seed: int = 0, branch: int = 4):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.branch = branch
+        self.succ = rng.integers(0, vocab, (vocab, branch))
+        p = 1.0 / (np.arange(branch) + 1.0)
+        self.p = p / p.sum()
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int):
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, batch)
+        for t in range(seq):
+            pick = rng.choice(self.branch, size=batch, p=self.p)
+            explore = rng.random(batch) < 0.1
+            nxt = self.succ[toks[:, t], pick]
+            toks[:, t + 1] = np.where(
+                explore, rng.integers(0, self.vocab, batch), nxt)
+        return toks
+
+
+class TokenPipeline:
+    """Double-buffered prefetching batch iterator with straggler guard.
+
+    ``skip_after``: if a producer step exceeds the timeout, the batch is
+    dropped and a fresh one produced (host-side straggler mitigation —
+    the analogue of the shedder's bounded queue for the training path).
+    """
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 prefetch: int = 2, shardings=None, skip_after: float = 30.0):
+        self.stream = BigramStream(vocab, seed)
+        self.rng = np.random.default_rng(seed + 1)
+        self.batch, self.seq = batch, seq
+        self.shardings = shardings
+        self.skip_after = skip_after
+        self._queue: _q.Queue = _q.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _make(self):
+        toks = self.stream.sample(self.rng, self.batch, self.seq)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.shardings is not None:
+            batch = {k: jax.device_put(v, self.shardings.get(k))
+                     for k, v in batch.items()}
+        return batch
+
+    def _producer(self):
+        while not self._stop.is_set():
+            b = self._make()
+            while not self._stop.is_set():
+                try:
+                    self._queue.put(b, timeout=0.5)
+                    break
+                except _q.Full:
+                    continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        try:
+            return self._queue.get(timeout=self.skip_after)
+        except _q.Empty:
+            # straggler: synthesize inline rather than stalling the step
+            return self._make()
+
+    def close(self):
+        self._stop.set()

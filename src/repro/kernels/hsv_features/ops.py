@@ -1,0 +1,36 @@
+"""Jit'd public wrapper around the fused HSV feature kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.colors import Color
+from repro.core.utility import B_S, B_V
+from repro.kernels.hsv_features.kernel import hsv_hist
+from repro.kernels.hsv_features.ref import pf_from_counts
+
+
+def frame_pf(rgb, fg, colors: Sequence[Color], bs: int = B_S, bv: int = B_V,
+             interpret: bool = True):
+    """One frame -> (pf (nc, bs, bv), hue_fraction (nc,)).
+
+    rgb: (H, W, 3) float32 (0..255); fg: (H, W) bool.
+    """
+    hue_ranges = tuple(tuple(c.hue_ranges) for c in colors)
+    n = rgb.shape[0] * rgb.shape[1]
+    counts, totals, fgtot = hsv_hist(rgb.reshape(n, 3), fg.reshape(n),
+                                     hue_ranges, bs, bv, interpret=interpret)
+    pf = pf_from_counts(counts, totals, bs, bv)
+    hf = totals / jnp.maximum(fgtot, 1.0)
+    return pf, hf
+
+
+def batch_pf(rgb, fg, colors: Sequence[Color], bs: int = B_S, bv: int = B_V,
+             interpret: bool = True):
+    """(T, H, W, 3) -> (pf (T, nc, bs, bv), hf (T, nc)) via vmap."""
+    f = functools.partial(frame_pf, colors=colors, bs=bs, bv=bv,
+                          interpret=interpret)
+    return jax.vmap(lambda a, b: f(a, b))(rgb, fg)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the fused HSV feature kernel.
+
+Given RGB pixels, a foreground mask, and a static list of colors (hue
+ranges), produce per-color:
+  counts  (n_colors, B_S * B_V)  — pixels per (sat, val) bin (hue-masked)
+  totals  (n_colors,)            — total hue-masked foreground pixels
+  fg_total ()                    — total foreground pixels
+from which PF matrices (Eq. 10) and hue fractions (Eq. 6) follow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.colors import rgb_to_hsv_jnp
+from repro.core.utility import B_S, B_V
+
+
+def hsv_hist_ref(rgb, fg, hue_ranges, bs: int = B_S, bv: int = B_V):
+    """rgb: (N, 3) float32 in [0,255]; fg: (N,) bool;
+    hue_ranges: tuple of tuples of (lo, hi) — one tuple per color.
+
+    Returns (counts (n_colors, bs*bv) f32, totals (n_colors,) f32,
+             fg_total () f32).
+    """
+    hsv = rgb_to_hsv_jnp(rgb)
+    h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]
+    fgf = fg.astype(jnp.float32)
+    sb = jnp.clip((s / (256 // bs)).astype(jnp.int32), 0, bs - 1)
+    vb = jnp.clip((v / (256 // bv)).astype(jnp.int32), 0, bv - 1)
+    joint = sb * bv + vb
+    counts, totals = [], []
+    for ranges in hue_ranges:
+        m = jnp.zeros(h.shape, bool)
+        for lo, hi in ranges:
+            m |= (h >= lo) & (h < hi)
+        mf = m.astype(jnp.float32) * fgf
+        onehot = (joint[None, :] == jnp.arange(bs * bv)[:, None]).astype(jnp.float32)
+        counts.append(jnp.sum(onehot * mf[None, :], axis=1))
+        totals.append(jnp.sum(mf))
+    return (jnp.stack(counts), jnp.stack(totals), jnp.sum(fgf))
+
+
+def pf_from_counts(counts, totals, bs: int = B_S, bv: int = B_V):
+    pf = counts / jnp.maximum(totals[..., None], 1.0)
+    return pf.reshape(*counts.shape[:-1], bs, bv)

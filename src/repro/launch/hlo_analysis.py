@@ -1,0 +1,85 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.as_text()`` is the *per-device* program after GSPMD
+partitioning, so every size parsed here is bytes-per-device. The
+roofline collective term is per_device_collective_bytes / link_bw —
+algebraically identical to the spec's global_bytes / (chips * link_bw).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+
+def _lhs_bytes(line: str) -> int:
+    """Sum tensor sizes on the LHS of an HLO instruction line."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return 0
+    lhs_end = line.find("(", eq + 3)
+    # output type(s) appear between '=' and the op name; find op position
+    total = 0
+    seg = line[eq + 3:]
+    # cut at the op name occurrence to avoid parsing operand types
+    for m in _SHAPE_RE.finditer(seg):
+        start = m.start()
+        # stop once we pass the op name (operands follow it)
+        prefix = seg[:start]
+        if any(op + "(" in prefix for op in COLLECTIVE_OPS):
+            break
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (output sizes)."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match op as instruction name: "... = type[...] all-reduce(" etc.
+            if re.search(rf"\b{op}(-start)?\(", stripped) and " = " in stripped:
+                out[op] += _lhs_bytes(stripped)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float) -> Dict[str, float]:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = coll_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["step_time_lower_bound_s"] = bound
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,131 @@
+"""Block-level composition: norm -> mixer -> residual (+ MLP/MoE half).
+
+A "block" is one entry of ``cfg.block_pattern``. Every block kind
+implements three entry points with a uniform signature:
+
+  specs(cfg, kind)                       -> ParamSpec tree
+  apply_full(cfg, kind, params, x, positions, want_cache) -> (x, cache|None)
+  apply_step(cfg, kind, params, x, cache, pos)            -> (x, cache)
+
+The SHARED_ATTN kind reuses one weight-tied parameter set across all
+pattern repetitions (Zamba-style); its params are passed separately by
+the caller, but its *cache* is per-repetition.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL_ATTN, MAMBA2, MLSTM, SHARED_ATTN, SLSTM
+from repro.models import ssm
+from repro.models.attention import (
+    attend_decode,
+    attend_full,
+    attention_specs,
+    init_kv_cache,
+    prefill_into_cache,
+)
+from repro.models.common import mlp, mlp_specs, rmsnorm, rmsnorm_spec
+from repro.models.moe import moe_apply, moe_specs
+
+
+def _has_mlp_half(cfg, kind) -> bool:
+    return kind in (ATTN, LOCAL_ATTN, SHARED_ATTN) and (cfg.d_ff > 0 or cfg.num_experts > 0)
+
+
+def block_specs(cfg, kind) -> dict:
+    d = cfg.d_model
+    sp = {"norm1": rmsnorm_spec(d)}
+    if kind in (ATTN, LOCAL_ATTN, SHARED_ATTN):
+        sp["attn"] = attention_specs(cfg)
+    elif kind == MAMBA2:
+        sp["mixer"] = ssm.mamba2_specs(cfg)
+    elif kind == MLSTM:
+        sp["mixer"] = ssm.mlstm_specs(cfg)
+    elif kind == SLSTM:
+        sp["mixer"] = ssm.slstm_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if _has_mlp_half(cfg, kind):
+        sp["norm2"] = rmsnorm_spec(d)
+        if cfg.num_experts > 0:
+            sp["moe"] = moe_specs(cfg)
+        else:
+            sp["mlp"] = mlp_specs(d, cfg.d_ff)
+    return sp
+
+
+def _window(cfg, kind) -> Optional[int]:
+    return cfg.sliding_window if kind == LOCAL_ATTN else None
+
+
+def _mlp_half(cfg, params, x):
+    """Second residual half. Returns (x, aux_loss)."""
+    aux = 0.0
+    if "moe" in params:
+        h, aux = moe_apply(params["moe"], cfg, rmsnorm(x, params["norm2"], cfg.norm_eps))
+        x = x + h
+    elif "mlp" in params:
+        x = x + mlp(params["mlp"], rmsnorm(x, params["norm2"], cfg.norm_eps))
+    return x, aux
+
+
+def block_apply_full(cfg, kind, params, x, positions, *, want_cache=False,
+                     max_seq=None):
+    """Full-sequence forward (train / prefill). Returns (x, cache, aux)."""
+    h = rmsnorm(x, params["norm1"], cfg.norm_eps)
+    cache = None
+    if kind in (ATTN, LOCAL_ATTN, SHARED_ATTN):
+        out, (k, v) = attend_full(params["attn"], cfg, h, positions,
+                                  causal=True, window=_window(cfg, kind))
+        x = x + out
+        if want_cache:
+            cache = init_kv_cache(cfg, x.shape[0], max_seq, window=_window(cfg, kind))
+            cache = prefill_into_cache(cache, k, v, positions, window=_window(cfg, kind))
+    elif kind == MAMBA2:
+        out = ssm.mamba2_train(params["mixer"], cfg, h, return_state=want_cache)
+        out, cache = out if want_cache else (out, None)
+        x = x + out
+    elif kind == MLSTM:
+        out = ssm.mlstm_train(params["mixer"], cfg, h, return_state=want_cache)
+        out, cache = out if want_cache else (out, None)
+        x = x + out
+    elif kind == SLSTM:
+        out = ssm.slstm_train(params["mixer"], cfg, h, return_state=want_cache)
+        out, cache = out if want_cache else (out, None)
+        x = x + out
+    x, aux = _mlp_half(cfg, params, x)
+    return x, cache, aux
+
+
+def block_apply_step(cfg, kind, params, x, cache, pos):
+    """One-token decode. Returns (x, cache)."""
+    h = rmsnorm(x, params["norm1"], cfg.norm_eps)
+    if kind in (ATTN, LOCAL_ATTN, SHARED_ATTN):
+        out, cache = attend_decode(params["attn"], cfg, h, cache, pos,
+                                   window=_window(cfg, kind))
+        x = x + out
+    elif kind == MAMBA2:
+        out, cache = ssm.mamba2_step(params["mixer"], cfg, h, cache)
+        x = x + out
+    elif kind == MLSTM:
+        out, cache = ssm.mlstm_step(params["mixer"], cfg, h, cache)
+        x = x + out
+    elif kind == SLSTM:
+        out, cache = ssm.slstm_step(params["mixer"], cfg, h, cache)
+        x = x + out
+    x, _ = _mlp_half(cfg, params, x)
+    return x, cache
+
+
+def block_init_cache(cfg, kind, batch, max_seq):
+    if kind in (ATTN, LOCAL_ATTN, SHARED_ATTN):
+        return init_kv_cache(cfg, batch, max_seq, window=_window(cfg, kind))
+    if kind == MAMBA2:
+        return ssm.mamba2_init_state(cfg, batch)
+    if kind == MLSTM:
+        return ssm.mlstm_init_state(cfg, batch)
+    if kind == SLSTM:
+        return ssm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)

@@ -1,0 +1,85 @@
+"""Shared model building blocks (pure JAX, functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.api import ParamSpec, constrain
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    ang = ang[..., :, None, :]                          # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d_model: int):
+    """positions: (...,) -> (..., d_model) float32 sinusoidal embeddings."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Dense layers
+# ---------------------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, axes, scale=None) -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes, scale=scale)
+
+
+def dense(x, w, dtype=None):
+    dtype = dtype or x.dtype
+    return jnp.einsum("...d,df->...f", x, w.astype(dtype))
+
+
+def mlp_specs(d: int, d_ff: int) -> dict:
+    return {
+        "gate": dense_spec(d, d_ff, ("embed", "mlp")),
+        "up": dense_spec(d, d_ff, ("embed", "mlp")),
+        "down": dense_spec(d_ff, d, ("mlp", "embed")),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(dense(x, params["gate"])) * dense(x, params["up"])
+    h = constrain(h, "batch", None, "mlp")
+    return dense(h, params["down"])

@@ -1,0 +1,364 @@
+"""Top-level language model: embedding -> scanned block stack -> logits.
+
+Layer stacking: the block pattern (one period, e.g. gemma3's 5 local +
+1 global) is the scan *body*; parameters for each pattern position are
+stacked over pattern repetitions and consumed as scan xs. This keeps the
+HLO size O(pattern) instead of O(num_layers) — essential for compiling
+the 40-cell dry-run in bounded time.
+
+Encoder-decoder (whisper) takes a separate path: the 4+4 layer stacks
+are small, and decoder blocks carry cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHARED_ATTN, ModelConfig
+from repro.models import blocks as B
+from repro.models.attention import (
+    attend_decode,
+    attend_full,
+    attention_specs,
+    init_kv_cache,
+    prefill_into_cache,
+)
+from repro.models.common import mlp, mlp_specs, rmsnorm, rmsnorm_spec, sinusoidal_pos
+from repro.sharding.api import ParamSpec, constrain, tree_map_specs
+
+VOCAB_PAD_MULTIPLE = 256
+
+
+def padded_vocab(cfg) -> int:
+    v, m = cfg.vocab_size, VOCAB_PAD_MULTIPLE
+    return (v + m - 1) // m * m
+
+
+def _stack_specs(tree, reps: int):
+    return tree_map_specs(
+        lambda s: ParamSpec((reps,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, dtype=s.dtype, scale=s.scale), tree)
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    d, vp = cfg.d_model, padded_vocab(cfg)
+    reps = cfg.pattern_repeats
+    # opt_head_nofsdp: keep the d_model dim of embed/head out of the FSDP
+    # rules — sharding the *contraction* dim of the huge logits matmul
+    # over 'data' turns the whole (B,S,V) logits tensor into a cross-data
+    # all-reduce (dominant collective on large-vocab archs).
+    d_axis = "table_d" if cfg.opt_head_nofsdp else "embed"
+    specs = {
+        "embed": ParamSpec((vp, d), ("vocab", d_axis), scale=0.02),
+        "final_norm": rmsnorm_spec(d),
+        "blocks": tuple(
+            _stack_specs(B.block_specs(cfg, kind), reps)
+            if kind != SHARED_ATTN else {}
+            for kind in cfg.block_pattern),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, vp), (d_axis, "vocab"), scale=0.02)
+    if SHARED_ATTN in cfg.block_pattern:
+        specs["shared"] = B.block_specs(cfg, SHARED_ATTN)
+    if cfg.is_encoder_decoder:
+        enc_block = {
+            "norm1": rmsnorm_spec(d), "attn": attention_specs(cfg),
+            "norm2": rmsnorm_spec(d), "mlp": mlp_specs(d, cfg.d_ff),
+        }
+        specs["encoder"] = {
+            "blocks": _stack_specs(enc_block, cfg.encoder_layers),
+            "final_norm": rmsnorm_spec(d),
+        }
+        cross_block = {"norm_cross": rmsnorm_spec(d),
+                       "cross": attention_specs(cfg, cross=True)}
+        specs["cross"] = _stack_specs(cross_block, cfg.num_layers)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens, positions):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.rope_theta <= 0.0:           # sinusoidal absolute positions
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)[None]
+    return constrain(x, "batch", None, "embed")
+
+
+def logits_fn(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:            # mask padded vocab entries
+        pad = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad[None, None, :], -1e30, logits)
+    if cfg.logit_softcap > 0.0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, audio_embed):
+    """audio_embed: (B, T, d) precomputed frontend stub output."""
+    enc = params["encoder"]
+    T = audio_embed.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x = audio_embed.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, prm):
+        h = rmsnorm(x, prm["norm1"], cfg.norm_eps)
+        out, _ = attend_full(prm["attn"], cfg, h, positions, causal=False)
+        x = x + out
+        x = x + mlp(prm["mlp"], rmsnorm(x, prm["norm2"], cfg.norm_eps))
+        return x, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg, cross_params, encoder_out):
+    """Precompute cross-attention K/V per decoder layer (stacked)."""
+    def one(prm):
+        k = jnp.einsum("bsd,dnh->bsnh", encoder_out, prm["cross"]["wk"].astype(encoder_out.dtype))
+        v = jnp.einsum("bsd,dnh->bsnh", encoder_out, prm["cross"]["wv"].astype(encoder_out.dtype))
+        return {"k": k, "v": v}
+    return jax.vmap(one)(cross_params) if False else jax.lax.map(one, cross_params)
+
+
+def _apply_cross(cfg, prm, x, cross_kv, positions):
+    h = rmsnorm(x, prm["norm_cross"], cfg.norm_eps)
+    T = cross_kv["k"].shape[1]
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    out, _ = attend_full(prm["cross"], cfg, h, positions, causal=False,
+                         kv_override=(cross_kv["k"], cross_kv["v"]),
+                         kv_positions=kv_pos)
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def lm_forward(cfg, params, batch, *, want_cache=False, max_seq=None,
+               last_logit_only=False):
+    """batch: {"tokens": (B,S) int32 [, "audio_embed": (B,T,d)]}.
+
+    Returns (logits, caches, aux_loss); caches is None unless want_cache.
+    """
+    tokens = batch["tokens"]
+    Bsz, S = tokens.shape
+    max_seq = max_seq or S
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(cfg, params, tokens, positions)
+
+    encoder_out = None
+    cross_kv_all = None
+    if cfg.is_encoder_decoder:
+        encoder_out = encode(cfg, params, batch["audio_embed"])
+        cross_kv_all = _cross_kv(cfg, params["cross"], encoder_out)
+
+    shared = params.get("shared")
+    pattern = cfg.block_pattern
+
+    # Encoder-decoder path: cross params/kv are per *layer* (pattern len 1).
+    if cfg.is_encoder_decoder:
+        assert len(pattern) == 1
+
+        def body(x, xs):
+            rep_params, rep_cross, rep_ckv = xs
+            prm = rep_params[0]
+            x, cache, a = B.block_apply_full(cfg, pattern[0], prm, x, positions,
+                                             want_cache=want_cache, max_seq=max_seq)
+            x = _apply_cross(cfg, rep_cross, x, rep_ckv, positions)
+            return x, ((cache,), a)
+
+        xs = (params["blocks"], params["cross"], cross_kv_all)
+    else:
+        xs = (params["blocks"], None)
+
+        def body(x, xs):
+            rep_params, _ = xs
+            if cfg.opt_seq_shard and not want_cache:
+                # Megatron-style sequence sharding of the remat-saved
+                # block inputs: the carry saved per rep shrinks by the
+                # model-axis size (attention gathers it back on demand)
+                x = constrain(x, "batch", "seq_shard", None)
+            caches, aux = [], jnp.float32(0)
+            for p_idx, kind in enumerate(pattern):
+                prm = shared if kind == SHARED_ATTN else rep_params[p_idx]
+                x, cache, a = B.block_apply_full(cfg, kind, prm, x, positions,
+                                                 want_cache=want_cache,
+                                                 max_seq=max_seq)
+                caches.append(cache)
+                aux = aux + a
+            return x, (tuple(caches), aux)
+
+    run = body
+    if cfg.remat == "block":
+        run = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, (caches, auxs) = jax.lax.scan(run, x, xs)
+    else:
+        # unrolled: identical math; used by the roofline analysis because
+        # XLA cost_analysis counts while-loop bodies once, not xtrip-count
+        caches_l, auxs_l = [], []
+        for r in range(cfg.pattern_repeats):
+            xs_r = jax.tree_util.tree_map(lambda a: a[r], xs)
+            x, (c_r, a_r) = run(x, xs_r)
+            caches_l.append(c_r)
+            auxs_l.append(a_r)
+        caches = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *caches_l)
+        auxs = jnp.stack(auxs_l)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_logit_only:
+        x = x[:, -1:, :]
+    logits = logits_fn(cfg, params, x)
+    out_caches = {"blocks": caches, "cross_kv": cross_kv_all} if want_cache else None
+    return logits, out_caches, jnp.sum(auxs)
+
+
+def lm_loss(cfg, params, batch):
+    """Next-token CE. batch: tokens (B,S), labels (B,S), optional mask."""
+    logits, _, aux = lm_forward(cfg, params, batch)
+    labels = batch["labels"]
+    vp = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, vp, dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1).astype(jnp.float32)
+    ce = logz - label_logit
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = jnp.mean(ce)
+    else:
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.float32(labels.size)}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def lm_prefill(cfg, params, batch, *, max_seq):
+    logits, caches, _ = lm_forward(cfg, params, batch, want_cache=True,
+                                   max_seq=max_seq, last_logit_only=True)
+    return caches, logits[:, 0, :]
+
+
+def init_caches(cfg, batch_size, max_seq, encoder_seq=None):
+    reps = cfg.pattern_repeats
+
+    def one_rep(_):
+        return tuple(B.block_init_cache(cfg, kind, batch_size, max_seq)
+                     for kind in cfg.block_pattern)
+
+    # Build stacked caches by vmapping the initializer over a dummy axis.
+    stacked = jax.vmap(one_rep)(jnp.arange(reps))
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        T = encoder_seq or cfg.encoder_seq
+        cross_kv = {
+            "k": jnp.zeros((cfg.num_layers, batch_size, T, nkv, hd), jnp.bfloat16),
+            "v": jnp.zeros((cfg.num_layers, batch_size, T, nkv, hd), jnp.bfloat16),
+        }
+    return {"blocks": stacked, "cross_kv": cross_kv}
+
+
+def lm_decode_step(cfg, params, caches, tokens, pos):
+    """tokens: (B,1) int32; pos: scalar int32 — current absolute position.
+
+    Returns (new_caches, logits (B, vocab)).
+    """
+    positions = jnp.full((1,), pos, jnp.int32)
+    x = embed_tokens(cfg, params, tokens, positions)
+    shared = params.get("shared")
+    pattern = cfg.block_pattern
+
+    def apply_rep(x, rep_params, rep_cache, rep_cross=None, rep_ckv=None):
+        if cfg.is_encoder_decoder:
+            x, cache = B.block_apply_step(cfg, pattern[0], rep_params[0], x,
+                                          rep_cache[0], pos)
+            h = rmsnorm(x, rep_cross["norm_cross"], cfg.norm_eps)
+            out, _ = attend_decode(rep_cross["cross"], cfg, h, rep_ckv, pos,
+                                   cross=True)
+            return x + out, (cache,)
+        new = []
+        for p_idx, kind in enumerate(pattern):
+            prm = shared if kind == SHARED_ATTN else rep_params[p_idx]
+            x, c = B.block_apply_step(cfg, kind, prm, x, rep_cache[p_idx], pos)
+            new.append(c)
+        return x, tuple(new)
+
+    if cfg.opt_decode_carry:
+        # caches ride the scan CARRY and are updated in place with
+        # dynamic_update_index_in_dim: XLA aliases while-loop carries, so
+        # the stacked KV cache is not double-buffered through xs/ys
+        # (which costs 2x cache HBM + full copies per step).
+        def body(carry, xs_r):
+            x, stacked, r = carry
+            rep_cache = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, r, 0, keepdims=False),
+                stacked)
+            if cfg.is_encoder_decoder:
+                rep_params, rep_cross, rep_ckv = xs_r
+                x, new_cache = apply_rep(x, rep_params, rep_cache, rep_cross,
+                                         rep_ckv)
+            else:
+                rep_params = xs_r
+                x, new_cache = apply_rep(x, rep_params, rep_cache)
+            stacked = jax.tree_util.tree_map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), r, 0), stacked, new_cache)
+            return (x, stacked, r + 1), None
+
+        xs = ((params["blocks"], params["cross"], caches["cross_kv"])
+              if cfg.is_encoder_decoder else params["blocks"])
+        if cfg.scan_layers:
+            (x, new_blocks, _), _ = jax.lax.scan(
+                body, (x, caches["blocks"], jnp.int32(0)), xs)
+        else:
+            carry = (x, caches["blocks"], jnp.int32(0))
+            for r in range(cfg.pattern_repeats):
+                xs_r = jax.tree_util.tree_map(lambda a: a[r], xs)
+                carry, _ = body(carry, xs_r)
+            x, new_blocks, _ = carry
+    else:
+        if cfg.is_encoder_decoder:
+            def body(x, xs_r):
+                rep_params, rep_cross, rep_cache, rep_ckv = xs_r
+                return apply_rep(x, rep_params, rep_cache, rep_cross, rep_ckv)
+
+            xs = (params["blocks"], params["cross"], caches["blocks"],
+                  caches["cross_kv"])
+        else:
+            def body(x, xs_r):
+                rep_params, rep_cache = xs_r
+                return apply_rep(x, rep_params, rep_cache)
+
+            xs = (params["blocks"], caches["blocks"])
+
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(body, x, xs)
+        else:
+            blocks_l = []
+            for r in range(cfg.pattern_repeats):
+                xs_r = jax.tree_util.tree_map(lambda a: a[r], xs)
+                x, c_r = body(x, xs_r)
+                blocks_l.append(c_r)
+            new_blocks = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                                *blocks_l)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x)[:, 0, :]
+    return {"blocks": new_blocks, "cross_kv": caches.get("cross_kv")}, logits

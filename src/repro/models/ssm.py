@@ -1,0 +1,355 @@
+"""Recurrent sequence mixers: Mamba2 (SSD), xLSTM's mLSTM and sLSTM.
+
+Training uses chunk-parallel forms (quadratic within a chunk of length
+``cfg.ssm_chunk``, linear across chunks via ``lax.scan``), which is the
+TPU-friendly adaptation: intra-chunk terms are MXU matmuls, the
+cross-chunk recurrence carries only the (H, P, N) state. Decode uses the
+exact single-step recurrences; chunked-vs-step parity is asserted in
+tests.
+
+Simplifications vs. the reference CUDA implementations (documented in
+DESIGN.md): the mLSTM chunked path omits the max-stabilizer (the decode
+step keeps it; they agree in exact arithmetic), and the Mamba2
+depthwise conv is applied to the x-path only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rmsnorm
+from repro.sharding.api import ParamSpec, constrain
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "wz": ParamSpec((d, d_in), ("embed", "mlp")),
+        "wx": ParamSpec((d, d_in), ("embed", "mlp")),
+        "wB": ParamSpec((d, N), ("embed", "state")),
+        "wC": ParamSpec((d, N), ("embed", "state")),
+        "wdt": ParamSpec((d, H), ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), init="zeros"),
+        "A_log": ParamSpec((H,), ("heads",), init="neg_ssm_a"),
+        "D": ParamSpec((H,), ("heads",), init="ones"),
+        "conv_w": ParamSpec((4, d_in), ("dconv", "mlp"), scale=0.5),
+        "norm": ParamSpec((d_in,), ("mlp",), init="ones"),
+        "wo": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mamba2_inputs(params, cfg, x):
+    """Project x: (B,L,d) -> z, xh (B,L,H,P), B/C (B,L,N), dt (B,L,H)."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    dt_f = x.dtype
+    z = jnp.einsum("bld,df->blf", x, params["wz"].astype(dt_f))
+    xh = jnp.einsum("bld,df->blf", x, params["wx"].astype(dt_f))
+    Bm = jnp.einsum("bld,dn->bln", x, params["wB"].astype(dt_f)).astype(jnp.float32)
+    Cm = jnp.einsum("bld,dn->bln", x, params["wC"].astype(dt_f)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, params["wdt"].astype(dt_f)).astype(jnp.float32)
+        + params["dt_bias"])
+    return z, xh, Bm, Cm, dt, H, P
+
+
+def _causal_conv(xh, w):
+    """Depthwise causal conv, width 4. xh: (B,L,F); w: (4,F)."""
+    B, L, F = xh.shape
+    pad = jnp.pad(xh, ((0, 0), (3, 0), (0, 0)))
+    out = sum(pad[:, i:i + L, :] * w[i] for i in range(4))
+    return jax.nn.silu(out)
+
+
+def mamba2_train(params, cfg, x, return_state=False):
+    """Chunk-parallel SSD. x: (B,L,d) -> (B,L,d) [, final state]."""
+    B, L, d = x.shape
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    z, xh, Bm, Cm, dt, H, P = _mamba2_inputs(params, cfg, x)
+    xh_raw = xh
+    xh = _causal_conv(xh, params["conv_w"].astype(xh.dtype))
+    N = Bm.shape[-1]
+    A = -jnp.exp(params["A_log"])                                # (H,) < 0
+    xhh = xh.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    xbar = xhh * dtc[..., None]                                  # dt-weighted input
+    ldc = dtc * A                                                # log decay per step
+    lda = jnp.cumsum(ldc, axis=2)                                # (B,nc,Q,H)
+
+    def chunk(state, inputs):
+        xb, Bq, Cq, la, lc = inputs                              # per-chunk, (B,...)
+        la_last = la[:, -1]                                      # (B,H)
+        # inter: y_i = exp(la_i) * C_i . S_prev
+        y_inter = jnp.einsum("bqh,bqn,bhpn->bqhp", jnp.exp(la), Cq, state)
+        # intra: y_i = sum_{j<=i} (C_i.B_j) exp(la_i - la_j) xbar_j
+        G = jnp.einsum("bin,bjn->bij", Cq, Bq)                   # (B,Q,Q)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        # mask INSIDE the exponent: exp of masked +large would give inf
+        # whose where-gradient is NaN (inf * 0)
+        ldiff = jnp.where(tri, la[:, :, None, :] - la[:, None, :, :], -1e30)
+        W = G[..., None] * jnp.exp(ldiff)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xb)
+        # state update
+        decay_state = jnp.exp(la_last[:, None, :] - la)          # (B,Q,H)
+        S_new = (state * jnp.exp(la_last)[:, :, None, None]
+                 + jnp.einsum("bqh,bqn,bqhp->bhpn", decay_state, Bq, xb))
+        return S_new, y_inter + y_intra
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (xbar.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+          lda.swapaxes(0, 1), ldc.swapaxes(0, 1))
+    if getattr(cfg, "opt_chunk_remat", False):
+        # drop the O(B Q^2 H) intra-chunk residuals; recompute in backward
+        chunk = jax.checkpoint(chunk)
+    s_fin, ys = jax.lax.scan(chunk, state0, xs)                  # (nc,B,Q,H,P)
+    y = ys.swapaxes(0, 1).reshape(B, L, H, P)
+    y = y + params["D"][None, None, :, None] * xh.reshape(B, L, H, P).astype(jnp.float32)
+    y = y.reshape(B, L, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("blf,fd->bld", y, params["wo"].astype(x.dtype))
+    if return_state:
+        # conv cache: last 3 *pre-conv* xh inputs (as used by mamba2_step)
+        conv = xh_raw[:, -3:].astype(jnp.float32)
+        return out, {"s": s_fin, "conv": conv}
+    return out
+
+
+def mamba2_init_state(cfg, batch):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "s": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_in), jnp.float32),
+    }
+
+
+def mamba2_step(params, cfg, x, state):
+    """x: (B,1,d). Exact recurrence: s' = s*exp(dt A) + dt B (x) ; y = C.s + Dx."""
+    z, xh, Bm, Cm, dt, H, P = _mamba2_inputs(params, cfg, x)
+    # conv over cached last-3 inputs
+    conv_in = jnp.concatenate([state["conv"], xh.astype(jnp.float32)], axis=1)  # (B,4,F)
+    xh = jax.nn.silu(jnp.einsum("bqf,qf->bf", conv_in, params["conv_w"].astype(jnp.float32)))[:, None, :]
+    new_conv = conv_in[:, 1:]
+    B_ = x.shape[0]
+    A = -jnp.exp(params["A_log"])
+    xhh = xh.reshape(B_, H, P).astype(jnp.float32)
+    dt1 = dt[:, 0]                                               # (B,H)
+    dA = jnp.exp(dt1 * A)                                        # (B,H)
+    s_new = (state["s"] * dA[:, :, None, None]
+             + jnp.einsum("bh,bn,bhp->bhpn", dt1, Bm[:, 0], xhh))
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], s_new)
+    y = y + params["D"][None, :, None] * xhh
+    y = y.reshape(B_, 1, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    y = jnp.einsum("blf,fd->bld", y, params["wo"].astype(x.dtype))
+    return y, {"s": s_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = cfg.num_heads
+    return {
+        "wz": ParamSpec((d, d_in), ("embed", "mlp")),
+        "wx": ParamSpec((d, d_in), ("embed", "mlp")),
+        "wq": ParamSpec((d_in, d_in), ("mlp", "heads")),
+        "wk": ParamSpec((d_in, d_in), ("mlp", "heads")),
+        "wv": ParamSpec((d_in, d_in), ("mlp", "heads")),
+        "wi": ParamSpec((d_in, H), ("mlp", "heads"), scale=0.02),
+        "wf": ParamSpec((d_in, H), ("mlp", "heads"), scale=0.02),
+        "bi": ParamSpec((H,), ("heads",), init="zeros"),
+        "bf": ParamSpec((H,), ("heads",), init="ones"),   # bias toward remembering
+        "norm": ParamSpec((d_in,), ("mlp",), init="ones"),
+        "wo": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_inputs(params, cfg, x):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    P = d_in // H
+    B, L, _ = x.shape
+    z = jnp.einsum("bld,df->blf", x, params["wz"].astype(x.dtype))
+    xp = jnp.einsum("bld,df->blf", x, params["wx"].astype(x.dtype))
+    q = jnp.einsum("blf,fg->blg", xp, params["wq"].astype(x.dtype)).reshape(B, L, H, P)
+    k = jnp.einsum("blf,fg->blg", xp, params["wk"].astype(x.dtype)).reshape(B, L, H, P)
+    v = jnp.einsum("blf,fg->blg", xp, params["wv"].astype(x.dtype)).reshape(B, L, H, P)
+    li = (jnp.einsum("blf,fh->blh", xp, params["wi"].astype(x.dtype))
+          .astype(jnp.float32) + params["bi"])                   # log input gate
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("blf,fh->blh", xp, params["wf"].astype(x.dtype))
+        .astype(jnp.float32) + params["bf"])                     # log forget gate
+    scale = P ** -0.5
+    return z, q.astype(jnp.float32) * scale, k.astype(jnp.float32), \
+        v.astype(jnp.float32), li, lf, H, P
+
+
+def mlstm_train(params, cfg, x, return_state=False):
+    """Chunked linear-attention form (no stabilizer; fp32 log-space)."""
+    B, L, d = x.shape
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    z, q, k, v, li, lf, H, P = _mlstm_inputs(params, cfg, x)
+
+    def r(t):  # (B,L,...) -> (nc,B,Q,...)
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    lfc = jnp.cumsum(lf.reshape(B, nc, Q, H), axis=2).swapaxes(0, 1)  # cum log f
+    xs = (r(q), r(k), r(v), r(li), lfc)
+
+    def chunk(carry, inputs):
+        C, n = carry                                             # (B,H,P,P),(B,H,P)
+        qc, kc, vc, lic, lfcc = inputs
+        lf_last = lfcc[:, -1]                                    # (B,H)
+        # inter-chunk
+        y_inter = jnp.einsum("bqh,bqhp,bhpo->bqho", jnp.exp(lfcc), qc, C)
+        den_inter = jnp.einsum("bqh,bqhp,bhp->bqh", jnp.exp(lfcc), qc, n)
+        # intra-chunk: D_ij = exp(lfc_i - lfc_j + li_j), j <= i
+        ldm = (lfcc[:, :, None, :] - lfcc[:, None, :, :]
+               + lic[:, None, :, :])                             # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        Dm = jnp.exp(jnp.where(tri, ldm, -1e30))   # mask inside the exponent
+        S = jnp.einsum("bihp,bjhp->bijh", qc, kc)                # scores
+        W = Dm * S
+        y_intra = jnp.einsum("bijh,bjho->biho", W, vc)
+        den_intra = jnp.sum(W, axis=2)                           # (B,Q,H)
+        # state update
+        wdec = jnp.exp(lf_last[:, None, :] - lfcc + lic)         # (B,Q,H)
+        C_new = (C * jnp.exp(lf_last)[:, :, None, None]
+                 + jnp.einsum("bqh,bqhp,bqho->bhpo", wdec, kc, vc))
+        n_new = (n * jnp.exp(lf_last)[:, :, None]
+                 + jnp.einsum("bqh,bqhp->bhp", wdec, kc))
+        num = y_inter + y_intra
+        den = den_inter + den_intra
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        return (C_new, n_new), h
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    if getattr(cfg, "opt_chunk_remat", False):
+        chunk = jax.checkpoint(chunk)
+    (C_fin, n_fin), ys = jax.lax.scan(chunk, (C0, n0), xs)       # (nc,B,Q,H,P)
+    y = ys.swapaxes(0, 1).reshape(B, L, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("blf,fd->bld", y, params["wo"].astype(x.dtype))
+    if return_state:
+        # m=0 is consistent: the chunked path is the unstabilized recurrence
+        return out, {"C": C_fin, "n": n_fin,
+                     "m": jnp.zeros((B, H), jnp.float32)}
+    return out
+
+
+def mlstm_init_state(cfg, batch):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    P = d_in // H
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_step(params, cfg, x, state):
+    """Stabilized exact recurrence (one token). x: (B,1,d)."""
+    z, q, k, v, li, lf, H, P = _mlstm_inputs(params, cfg, x)
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]                       # (B,H,P)
+    li1, lf1 = li[:, 0], lf[:, 0]                                # (B,H)
+    m_new = jnp.maximum(lf1 + state["m"], li1)
+    fs = jnp.exp(lf1 + state["m"] - m_new)                       # (B,H)
+    is_ = jnp.exp(li1 - m_new)
+    C_new = state["C"] * fs[:, :, None, None] + is_[:, :, None, None] * \
+        jnp.einsum("bhp,bho->bhpo", k1, v1)
+    n_new = state["n"] * fs[:, :, None] + is_[:, :, None] * k1
+    num = jnp.einsum("bhp,bhpo->bho", q1, C_new)
+    den = jnp.einsum("bhp,bhp->bh", q1, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = h[:, None].reshape(x.shape[0], 1, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    y = jnp.einsum("blf,fd->bld", y, params["wo"].astype(x.dtype))
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory, sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    sp = {}
+    for g in ("i", "f", "z", "o"):
+        sp[f"w{g}"] = ParamSpec((d, d), ("embed", "mlp"), scale=0.02)
+        sp[f"r{g}"] = ParamSpec((d, d), ("mlp", "mlp"), scale=0.02)
+        sp[f"b{g}"] = ParamSpec((d,), ("mlp",),
+                                init="ones" if g == "f" else "zeros")
+    return sp
+
+
+def slstm_init_state(cfg, batch):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.zeros((batch, cfg.d_model), jnp.float32)}
+
+
+def _slstm_cell(params, x_t, st):
+    """x_t: (B,d) fp32; one stabilized sLSTM step."""
+    h = st["h"]
+
+    def gate(g):
+        return (x_t @ params[f"w{g}"].astype(jnp.float32)
+                + h @ params[f"r{g}"].astype(jnp.float32) + params[f"b{g}"])
+
+    li = gate("i")                                               # log input gate
+    lf = jax.nn.log_sigmoid(gate("f"))                           # log forget gate
+    zt = jnp.tanh(gate("z"))
+    ot = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(lf + st["m"], li)
+    fs = jnp.exp(lf + st["m"] - m_new)
+    is_ = jnp.exp(li - m_new)
+    c_new = fs * st["c"] + is_ * zt
+    n_new = jnp.maximum(fs * st["n"] + is_, jnp.exp(-m_new))
+    h_new = ot * c_new / n_new
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_train(params, cfg, x, return_state=False):
+    """Sequential scan over time. x: (B,L,d) -> (B,L,d)."""
+    B, L, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(st, x_t):
+        st2 = jax.remat(_slstm_cell, static_argnums=())(params, x_t, st)
+        return st2, st2["h"]
+
+    st0 = slstm_init_state(cfg, B)
+    st_fin, hs = jax.lax.scan(step, st0, xf.swapaxes(0, 1))      # (L,B,d)
+    out = hs.swapaxes(0, 1).astype(x.dtype)
+    if return_state:
+        return out, st_fin
+    return out
+
+
+def slstm_step(params, cfg, x, state):
+    st = _slstm_cell(params, x[:, 0].astype(jnp.float32), state)
+    return st["h"][:, None].astype(x.dtype), st

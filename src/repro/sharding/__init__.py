@@ -1,0 +1,25 @@
+from repro.sharding.api import (
+    DEFAULT_RULES,
+    ParamSpec,
+    constrain,
+    materialize,
+    num_params,
+    partition_spec,
+    spec_partition_specs,
+    spec_shapes,
+    spec_shardings,
+    tree_map_specs,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ParamSpec",
+    "constrain",
+    "materialize",
+    "num_params",
+    "partition_spec",
+    "spec_partition_specs",
+    "spec_shapes",
+    "spec_shardings",
+    "tree_map_specs",
+]

@@ -1,0 +1,54 @@
+"""Partition-spec derivation for decode caches (shape-keyed, path-keyed).
+
+Caches are not ParamSpec trees (they are created by ``init_caches``), so
+their logical axes are reconstructed from tree paths + ranks:
+
+  k/v KV cache      (reps, B, W, n_kv, hd)
+  pos               (reps, W)
+  mamba2 s          (reps, B, H, P, N)
+  mamba2 conv       (reps, B, 3, d_in)
+  mlstm C           (reps, B, H, P, P) ; n (reps,B,H,P) ; m (reps,B,H)
+  slstm c/n/h/m     (reps, B, d)
+  cross_kv k/v      (layers, B, T, n_kv, hd)
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import partition_spec
+
+
+def _axes_for(path_keys, shape, batch_size):
+    key = path_keys[-1] if path_keys else ""
+    nd = len(shape)
+    seq_axis = "longseq" if batch_size == 1 else "cache_seq"
+    if key in ("k", "v") and nd == 5:
+        return ("layers", "batch", seq_axis, "kv_heads", "head_dim")
+    if key in ("k_scale", "v_scale") and nd == 4:
+        return ("layers", "batch", seq_axis, "kv_heads")
+    if key == "pos":
+        return ("layers", None)
+    if key == "s" and nd == 5:
+        return ("layers", "batch", "heads", None, None)
+    if key == "conv":
+        return ("layers", "batch", None, "mlp")
+    if key == "C" and nd == 5:
+        return ("layers", "batch", "heads", None, None)
+    if key in ("n", "m", "c", "h"):
+        return ("layers", "batch") + (None,) * (nd - 2)
+    return (None,) * nd
+
+
+def cache_partition_specs(cache_shapes, mesh: Mesh, batch_size: int):
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        axes = _axes_for(keys, leaf.shape, batch_size)
+        return partition_spec(axes, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch_size: int):
+    specs = cache_partition_specs(cache_shapes, mesh, batch_size)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))

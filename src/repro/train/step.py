@@ -1,0 +1,35 @@
+"""Step functions lowered by the launcher and the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_decode_step, lm_loss, lm_prefill
+from repro.train.optimizer import AdamW
+
+
+def make_train_step(cfg, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics, "loss_total": loss}
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int):
+    def prefill_step(params, batch):
+        return lm_prefill(cfg, params, batch, max_seq=max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg, sample: bool = False):
+    def serve_step(params, caches, tokens, pos):
+        """One-token decode for a running batch; greedy next token."""
+        caches, logits = lm_decode_step(cfg, params, caches, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return caches, next_tok, logits
+    return serve_step

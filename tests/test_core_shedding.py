@@ -1,0 +1,241 @@
+"""Load shedder core: utility fn, CDF threshold, queue, control loop, QoR.
+
+Includes hypothesis property tests on the system's invariants.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    RED,
+    YELLOW,
+    ControlLoop,
+    LatencyInputs,
+    LoadShedder,
+    UtilityCDF,
+    UtilityQueue,
+    overall_qor,
+    per_object_qor,
+    train_utility_model,
+)
+from repro.core.utility import UtilityModel
+
+
+# ---------------------------------------------------------------------------
+# Utility model (Eq. 12-15)
+# ---------------------------------------------------------------------------
+
+def test_utility_training_separates(rng):
+    # synth PF: positives concentrated at high-sat bins, negatives low-sat
+    n = 200
+    pfs = np.zeros((n, 1, 8, 8), np.float32)
+    labels = rng.random(n) < 0.4
+    for i in range(n):
+        if labels[i]:
+            pfs[i, 0, 6, 5] = 0.8
+            pfs[i, 0, 1, 2] = 0.2
+        else:
+            pfs[i, 0, 1, 2] = 1.0
+    m = train_utility_model(pfs, labels, [RED])
+    us = np.asarray([float(m.score(pf)) for pf in pfs])
+    assert us[labels].min() > us[~labels].max()
+
+
+def test_composite_or_and(rng):
+    pfs = rng.random((50, 2, 8, 8)).astype(np.float32)
+    labels = (rng.random((50, 2)) < 0.5).astype(int)
+    m_or = train_utility_model(pfs, labels, [RED, YELLOW], op="or")
+    m_and = train_utility_model(pfs, labels, [RED, YELLOW], op="and")
+    for pf in pfs[:10]:
+        u_or = float(m_or.score(pf))
+        u_and = float(m_and.score(pf))
+        assert u_or >= u_and - 1e-6    # max >= min (Eq. 15)
+
+
+def test_utility_normalized_on_train_set(rng):
+    pfs = rng.random((100, 1, 8, 8)).astype(np.float32)
+    labels = rng.random(100) < 0.5
+    m = train_utility_model(pfs, labels, [RED])
+    us = [float(m.score(pf)) for pf in pfs]
+    assert max(us) == pytest.approx(1.0, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CDF / threshold (Eq. 16-17)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.floats(0, 1, allow_nan=False), min_size=1, max_size=500),
+       st.floats(0, 1, allow_nan=False))
+def test_threshold_achieves_target_rate(history, r):
+    """Property: dropping utilities < threshold drops a fraction of the
+    history that is >= r but minimal (within one sample)."""
+    cdf = UtilityCDF(history)
+    th = cdf.threshold_for_drop_rate(r)
+    h = np.asarray(history)
+    dropped = float((h < th).mean())
+    assert dropped >= min(r, 1.0) - 1e-9 or np.isclose(dropped, r, atol=1/len(h))
+    # minimality up to ties: excluding the top tie-group must undershoot
+    below = h[h < th]
+    if below.size:
+        without_tie = float((h < below.max()).mean())
+        assert without_tie < min(r, 1.0) + 1e-9
+
+
+def test_threshold_zero_drops_nothing():
+    cdf = UtilityCDF([0.1, 0.5, 0.9])
+    assert cdf.threshold_for_drop_rate(0.0) == -np.inf
+
+
+def test_cdf_eq16_definition():
+    cdf = UtilityCDF([0.1, 0.2, 0.3, 0.4])
+    assert cdf.cdf(0.25) == pytest.approx(0.5)
+    assert cdf.cdf(0.4) == pytest.approx(1.0)
+    assert cdf.cdf(0.05) == 0.0
+
+
+def test_cdf_sliding_window():
+    cdf = UtilityCDF(window=4)
+    cdf.update([0.0, 0.0, 0.0, 0.0])
+    cdf.update([1.0, 1.0, 1.0, 1.0])  # evicts the zeros
+    assert cdf.cdf(0.5) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Utility queue (dynamic queue sizing, §IV-D)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.floats(0, 1, allow_nan=False), min_size=1, max_size=200),
+       st.integers(1, 16))
+def test_queue_keeps_highest_utilities(us, size):
+    q = UtilityQueue(size)
+    for i, u in enumerate(us):
+        q.push(i, u)
+    kept = []
+    while True:
+        item = q.pop_best()
+        if item is None:
+            break
+        kept.append(us[item])
+    expect = sorted(us, reverse=True)[:size]
+    assert sorted(kept, reverse=True) == pytest.approx(expect)
+
+
+def test_queue_pop_best_order():
+    q = UtilityQueue(8)
+    for i, u in enumerate([0.3, 0.9, 0.1, 0.5]):
+        q.push(i, u)
+    assert [q.pop_best() for _ in range(4)] == [1, 3, 0, 2]
+
+
+def test_queue_resize_drops_lowest():
+    q = UtilityQueue(4)
+    for i, u in enumerate([0.4, 0.2, 0.9, 0.6]):
+        q.push(i, u)
+    dropped = q.resize(2)
+    assert set(dropped) == {1, 0}
+    assert len(q) == 2
+
+
+def test_queue_never_below_one():
+    q = UtilityQueue(4)
+    q.push(0, 0.5)
+    q.resize(0)
+    assert q.max_size == 1
+    assert q.pop_best() == 0
+
+
+# ---------------------------------------------------------------------------
+# Control loop (Eq. 18-20)
+# ---------------------------------------------------------------------------
+
+def test_target_drop_rate_eq19():
+    c = ControlLoop(latency_bound=1.0, fps=10.0)
+    c.report_backend_latency(0.2)       # ST = 5 fps
+    assert c.target_drop_rate() == pytest.approx(1 - 5 / 10, abs=0.05)
+    c2 = ControlLoop(latency_bound=1.0, fps=10.0)
+    c2.report_backend_latency(0.05)     # ST = 20 fps > ingress
+    assert c2.target_drop_rate() == 0.0
+
+
+def test_queue_size_eq20():
+    li = LatencyInputs(net_cam_ls=0.05, net_ls_q=0.05, proc_cam=0.1)
+    c = ControlLoop(latency_bound=1.0, fps=10.0, inputs=li)
+    c.report_backend_latency(0.1)
+    # (N+1)*0.1 + 0.2 <= 1.0 -> N <= 7
+    assert c.queue_size() == 7
+    assert c.expected_e2e(c.queue_size()) <= 1.0 + 1e-9
+
+
+def test_queue_size_floor_one():
+    c = ControlLoop(latency_bound=0.1, fps=10.0)
+    c.report_backend_latency(5.0)
+    assert c.queue_size() == 1
+
+
+def test_asymmetric_ewma_fast_up():
+    c = ControlLoop(latency_bound=1.0, fps=10.0)
+    c.report_backend_latency(0.01)
+    for _ in range(3):
+        c.report_backend_latency(0.5)
+    assert c.proc_q.value > 0.4         # converged fast upward
+
+
+# ---------------------------------------------------------------------------
+# Shedder end-to-end decisions
+# ---------------------------------------------------------------------------
+
+def _shedder(threshold_history, qsize=4):
+    cdf = UtilityCDF(threshold_history)
+    ctl = ControlLoop(1.0, 10.0)
+    return LoadShedder(None, cdf, ctl, qsize)
+
+
+def test_admission_drops_below_threshold():
+    sh = _shedder(np.linspace(0, 1, 100))
+    sh.control.report_backend_latency(0.2)   # ST=5, fps=10 -> r=.5 ->th~.5
+    sh.tick()
+    assert sh.offer("low", 0.1) == "shed_admission"
+    assert sh.offer("high", 0.9) == "queued"
+    assert sh.stats.dropped_admission == 1
+
+
+def test_queue_eviction_prefers_low_utility():
+    sh = _shedder(np.linspace(0, 1, 100), qsize=2)
+    sh.offer("a", 0.5)
+    sh.offer("b", 0.6)
+    sh.offer("c", 0.9)                        # evicts a
+    assert sh.stats.dropped_queue == 1
+    assert sh.next_frame() == "c"
+    assert sh.next_frame() == "b"
+    assert sh.next_frame() is None
+
+
+# ---------------------------------------------------------------------------
+# QoR (Eq. 2-3)
+# ---------------------------------------------------------------------------
+
+def test_qor_per_object():
+    objs = [{1}, {1}, {1, 2}, {2}, set()]
+    kept = [True, False, True, True, False]
+    per = per_object_qor(objs, kept)
+    assert per[1] == pytest.approx(2 / 3)
+    assert per[2] == pytest.approx(1.0)
+    assert overall_qor(objs, kept) == pytest.approx((2 / 3 + 1) / 2)
+
+
+def test_qor_no_objects_is_one():
+    assert overall_qor([set(), set()], [False, False]) == 1.0
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 50), st.integers(0, 2 ** 31 - 1))
+def test_qor_monotone_in_kept(n, seed):
+    """Property: keeping strictly more frames never lowers QoR."""
+    r = np.random.default_rng(seed)
+    objs = [set(r.choice(5, r.integers(0, 3), replace=False).tolist())
+            for _ in range(n)]
+    kept = r.random(n) < 0.5
+    more = kept | (r.random(n) < 0.3)
+    assert overall_qor(objs, more) >= overall_qor(objs, kept) - 1e-12

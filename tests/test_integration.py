@@ -1,0 +1,126 @@
+"""End-to-end paper behaviour: synthetic data -> features -> utility ->
+shedder -> simulator, validating the paper's three hypotheses at test
+scale (§V: separation on unseen videos, bounded latency under load,
+utility beats content-agnostic shedding)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    RED,
+    YELLOW,
+    drop_rate,
+    overall_qor,
+    train_utility_model,
+)
+from repro.core.control import LatencyInputs
+from repro.data.background import batch_foreground
+from repro.data.pipeline import interleave_streams, scenario_records
+from repro.data.synthetic import combined_label, generate_dataset
+from repro.serve.simulator import BackendProfile, PipelineSimulator, build_shedder
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return generate_dataset(range(5), num_frames=240, height=48, width=80)
+
+
+@pytest.fixture(scope="module")
+def trained(dataset):
+    train = dataset[:4]
+    recs = [r for i, s in enumerate(train)
+            for r in scenario_records(s, i, [RED])]
+    pfs = np.stack([r.pf for r in recs])
+    labels = np.array([r.label for r in recs])
+    model = train_utility_model(pfs, labels, [RED])
+    us = [float(model.score(r.pf)) for r in recs]
+    return model, us
+
+
+def test_hypothesis1_separation_on_unseen_video(dataset, trained):
+    """Paper Fig. 9a: positive utilities exceed negative on unseen video."""
+    model, _ = trained
+    recs = scenario_records(dataset[4], 9, [RED])
+    us = np.array([float(model.score(r.pf)) for r in recs])
+    labels = np.array([r.label for r in recs])
+    assert labels.any() and (~labels).any()
+    assert us[labels].mean() > 2.0 * us[~labels].mean()
+
+
+def test_hypothesis1_threshold_sweep_shape(dataset, trained):
+    """Paper Fig. 9b: a threshold exists with high drop rate AND QoR
+    well above the content-agnostic QoR at the same drop rate."""
+    model, _ = trained
+    recs = scenario_records(dataset[4], 9, [RED])
+    us = np.array([float(model.score(r.pf)) for r in recs])
+    objs = [r.objects for r in recs]
+    best = None
+    for th in np.linspace(0, 1, 101):
+        kept = us >= th
+        dr, q = 1 - kept.mean(), overall_qor(objs, kept)
+        if dr >= 0.5 and (best is None or q > best[1]):
+            best = (dr, q)
+    assert best is not None
+    dr, q = best
+    # content-agnostic at the same drop rate keeps ~ (1-dr) of each
+    # object's frames in expectation -> QoR ~= 1-dr
+    assert q > (1 - dr) + 0.15, best
+
+
+def test_hypothesis2_latency_bounded_under_load(dataset, trained):
+    model, train_us = trained
+    recs = scenario_records(dataset[4], 9, [RED], fps=10.0)
+    us = [float(model.score(r.pf)) for r in recs]
+    sh = build_shedder(model, train_us, latency_bound=1.0, fps=10.0)
+    res = PipelineSimulator(sh, BackendProfile(), tokens=1, seed=1).run(recs, us)
+    lat = res.e2e_latencies()
+    assert len(lat) > 0
+    # bounded latency: violations are rare events during re-tuning
+    assert res.violations <= max(2, 0.02 * len(lat))
+    assert np.max(lat) < 2.0
+
+
+def test_hypothesis3_beats_content_agnostic(dataset, trained):
+    """Paper Fig. 14: multi-camera aggregate stream; the content-agnostic
+    baseline sheds at the fixed rate from Eq. 18-19 with the paper's
+    lenient proc_Q = 500 ms assumption, while the utility-based shedder
+    adapts — utility QoR must be higher."""
+    model, train_us = trained
+    streams = [scenario_records(dataset[3 + i], i, [RED], fps=10.0)
+               for i in range(2)]
+    recs = interleave_streams(streams)
+    us = np.array([float(model.score(r.pf)) for r in recs])
+    objs = [r.objects for r in recs]
+    fps_total = 20.0
+    sh = build_shedder(model, train_us, latency_bound=1.0, fps=fps_total)
+    res = PipelineSimulator(sh, BackendProfile(), tokens=1, seed=1).run(recs, list(us))
+    q_util = overall_qor(objs, res.kept_mask)
+    r_fixed = max(0.0, 1.0 - (1.0 / 0.5) / fps_total)   # Eq. 19, proc=500ms
+    rng = np.random.default_rng(0)
+    q_rand = np.mean([
+        overall_qor(objs, rng.random(len(recs)) > r_fixed)
+        for _ in range(20)])
+    assert q_util > q_rand + 0.05, (q_util, q_rand)
+
+
+def test_multicam_interleaving(dataset, trained):
+    model, train_us = trained
+    streams = [scenario_records(s, i, [RED], fps=10.0)
+               for i, s in enumerate(dataset[3:5])]
+    recs = interleave_streams(streams)
+    ts = [r.t_gen for r in recs]
+    assert ts == sorted(ts)
+    assert {r.cam_id for r in recs} == {0, 1}
+
+
+def test_background_subtraction_suppresses_static(dataset):
+    sc = dataset[0]
+    fg = batch_foreground(sc.frames_hsv)
+    # after warmup the static background is mostly suppressed
+    assert fg[30:].mean() < 0.35
+
+
+def test_or_query_labels(dataset):
+    sc = dataset[0]
+    both = combined_label(sc, ["red", "yellow"], "or")
+    assert both.sum() >= sc.labels["red"].sum()
+    assert both.sum() >= sc.labels["yellow"].sum()

@@ -1,0 +1,55 @@
+"""Pallas flash-attention kernel vs. jnp oracle: shape/dtype/GQA/window sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_bsnh
+from repro.kernels.flash_attention.ref import attention_ref
+
+CASES = [
+    # B, Hq, Hkv, Sq, Sk, d, causal, window
+    (2, 4, 2, 256, 256, 64, True, None),
+    (1, 4, 4, 128, 256, 32, True, None),        # q at cache tail
+    (1, 8, 2, 256, 256, 64, True, 128),         # sliding window
+    (2, 2, 2, 128, 128, 64, False, None),       # bidirectional
+    (1, 2, 1, 512, 512, 128, True, 64),
+    (1, 16, 4, 128, 128, 64, True, None),       # wide GQA group
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(case, dtype, rng):
+    B, Hq, Hkv, Sq, Sk, d, causal, window = case
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Sk, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+def test_flash_block_shapes(bq, bk, rng):
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+
+
+def test_bsnh_wrapper_with_padding(rng):
+    """Model layout + non-block-multiple sequence."""
+    B, S, Hq, Hkv, d = 2, 200, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, d)), jnp.float32)
+    out = flash_attention_bsnh(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                        causal=True).swapaxes(1, 2)
+    np.testing.assert_allclose(out, ref, atol=2e-6)

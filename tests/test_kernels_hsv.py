@@ -1,0 +1,70 @@
+"""Pallas hsv_features kernel vs. pure-jnp oracle (shape/dtype sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.colors import BLUE, RED, YELLOW, rgb_to_hsv_jnp
+from repro.core.utility import pixel_fraction_matrix
+from repro.kernels.hsv_features.kernel import BLOCK, hsv_hist
+from repro.kernels.hsv_features.ops import frame_pf
+from repro.kernels.hsv_features.ref import hsv_hist_ref, pf_from_counts
+
+HUE_SETS = [
+    (tuple(RED.hue_ranges),),
+    (tuple(RED.hue_ranges), tuple(YELLOW.hue_ranges)),
+    (tuple(RED.hue_ranges), tuple(YELLOW.hue_ranges), tuple(BLUE.hue_ranges)),
+]
+
+
+@pytest.mark.parametrize("n", [17, 256, BLOCK, BLOCK + 1, 3 * BLOCK + 100])
+@pytest.mark.parametrize("hue_ranges", HUE_SETS)
+def test_kernel_matches_ref(n, hue_ranges, rng):
+    rgb = jnp.asarray(rng.uniform(0, 255, (n, 3)), jnp.float32)
+    fg = jnp.asarray(rng.random(n) < 0.7)
+    c1, t1, f1 = hsv_hist(rgb, fg, hue_ranges, interpret=True)
+    c2, t2, f2 = hsv_hist_ref(rgb, fg, hue_ranges)
+    np.testing.assert_allclose(c1, c2, atol=0)
+    np.testing.assert_allclose(t1, t2, atol=0)
+    np.testing.assert_allclose(f1, f2, atol=0)
+
+
+@pytest.mark.parametrize("bs,bv", [(8, 8), (4, 4), (16, 16)])
+def test_kernel_bin_sizes(bs, bv, rng):
+    rgb = jnp.asarray(rng.uniform(0, 255, (1000, 3)), jnp.float32)
+    fg = jnp.ones(1000, bool)
+    hr = (tuple(RED.hue_ranges),)
+    c1, t1, _ = hsv_hist(rgb, fg, hr, bs=bs, bv=bv, interpret=True)
+    c2, t2, _ = hsv_hist_ref(rgb, fg, hr, bs=bs, bv=bv)
+    np.testing.assert_allclose(c1, c2, atol=0)
+
+
+def test_frame_pf_matches_core_oracle(rng):
+    """Kernel PF == core.utility.pixel_fraction_matrix on HSV input."""
+    h, w = 32, 48
+    rgb = jnp.asarray(rng.uniform(0, 255, (h, w, 3)), jnp.float32)
+    fg = jnp.asarray(rng.random((h, w)) < 0.8)
+    pf_k, hf_k = frame_pf(rgb, fg, [RED, YELLOW], interpret=True)
+    hsv = rgb_to_hsv_jnp(rgb)
+    pf_red = pixel_fraction_matrix(hsv, RED, fg)
+    pf_yel = pixel_fraction_matrix(hsv, YELLOW, fg)
+    np.testing.assert_allclose(pf_k[0], pf_red, atol=1e-6)
+    np.testing.assert_allclose(pf_k[1], pf_yel, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 2000), st.integers(0, 2 ** 31 - 1))
+def test_kernel_property_counts_conserved(n, seed):
+    """Property: per-color counts sum to hue-masked fg pixel count and
+    never exceed fg total; PF rows are a distribution."""
+    r = np.random.default_rng(seed)
+    rgb = jnp.asarray(r.uniform(0, 255, (n, 3)), jnp.float32)
+    fg = jnp.asarray(r.random(n) < 0.5)
+    hr = (tuple(RED.hue_ranges),)
+    counts, totals, fgtot = hsv_hist(rgb, fg, hr, interpret=True)
+    assert float(jnp.sum(counts[0])) == pytest.approx(float(totals[0]))
+    assert float(totals[0]) <= float(fgtot) + 1e-6
+    pf = pf_from_counts(counts, totals)
+    s = float(jnp.sum(pf[0]))
+    assert s == pytest.approx(1.0, abs=1e-5) or float(totals[0]) == 0.0

@@ -1,0 +1,78 @@
+"""MoE routing/dispatch invariants + scatter-vs-onehot equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config, scaled
+from repro.models.moe import (
+    _positions_in_expert,
+    capacity,
+    moe_apply,
+    moe_onehot,
+    moe_scatter,
+    moe_specs,
+)
+from repro.sharding.api import materialize
+
+
+def _setup(E=4, k=2, cf=2.0, seed=0):
+    cfg = scaled(get_smoke_config("mixtral-8x7b"), num_experts=E, top_k=k,
+                 moe_capacity_factor=cf)
+    params = materialize(moe_specs(cfg), jax.random.key(seed))
+    return cfg, params
+
+
+def test_scatter_equals_onehot(rng):
+    cfg, params = _setup()
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y1, a1 = moe_scatter(params, cfg, x)
+    y2, a2 = moe_onehot(params, cfg, x)
+    np.testing.assert_allclose(y1, y2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(a1, a2, atol=1e-6)
+
+
+def test_positions_in_expert_unique(rng):
+    idx = jnp.asarray(rng.integers(0, 4, (2, 8, 2)), jnp.int32)
+    pos = _positions_in_expert(idx, 4)
+    # within a batch row, (expert, position) pairs must be unique
+    for b in range(2):
+        pairs = set()
+        for s in range(8):
+            for j in range(2):
+                p = (int(idx[b, s, j]), int(pos[b, s, j]))
+                assert p not in pairs
+                pairs.add(p)
+
+
+def test_high_capacity_keeps_all_tokens(rng):
+    """With cf large enough no token is dropped: output is a convex
+    combination of expert outputs (nonzero everywhere)."""
+    cfg, params = _setup(cf=4.0)
+    x = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    y, _ = moe_scatter(params, cfg, x)
+    assert float(jnp.min(jnp.sum(jnp.abs(y), axis=-1))) > 0.0
+
+
+def test_capacity_drops_overflow(rng):
+    cfg, params = _setup(cf=0.01)          # capacity 1 per expert
+    assert capacity(cfg, 64) == 1
+    x = jnp.asarray(rng.standard_normal((1, 64, cfg.d_model)), jnp.float32)
+    y, _ = moe_scatter(params, cfg, x)
+    # most tokens dropped -> many all-zero outputs
+    zero_rows = int(jnp.sum(jnp.sum(jnp.abs(y), axis=-1) == 0.0))
+    assert zero_rows > 32
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_aux_loss_at_least_one(E, k, seed):
+    """Switch aux loss >= 1 (equality iff perfectly uniform routing)."""
+    if k > E:
+        return
+    cfg, params = _setup(E=E, k=k, seed=seed % 100)
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    _, aux = moe_scatter(params, cfg, x)
+    assert float(aux) >= 1.0 - 1e-3

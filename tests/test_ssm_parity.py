@@ -1,0 +1,87 @@
+"""Chunked-parallel vs exact-recurrence parity for the SSM mixers, and
+hypothesis sweeps over shapes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config, scaled
+from repro.models import ssm
+from repro.sharding.api import materialize
+
+
+def _cfg(arch, **kw):
+    return scaled(get_smoke_config(arch), **kw)
+
+
+def _roll(step_fn, init_state, params, cfg, x):
+    st_ = init_state(cfg, x.shape[0])
+    outs = []
+    for t in range(x.shape[1]):
+        y, st_ = step_fn(params, cfg, x[:, t:t + 1], st_)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), st_
+
+
+@pytest.mark.parametrize("L,chunk", [(16, 16), (32, 8), (64, 16)])
+def test_mamba2_chunked_equals_recurrent(L, chunk, rng):
+    cfg = _cfg("zamba2-2.7b", ssm_chunk=chunk)
+    params = materialize(ssm.mamba2_specs(cfg), jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, L, cfg.d_model)) * 0.5, jnp.float32)
+    y_chunk, fin = ssm.mamba2_train(params, cfg, x, return_state=True)
+    y_step, fin_step = _roll(ssm.mamba2_step, ssm.mamba2_init_state,
+                             params, cfg, x)
+    np.testing.assert_allclose(y_chunk, y_step, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(fin["s"], fin_step["s"], atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("L,chunk", [(16, 16), (32, 8)])
+def test_mlstm_chunked_equals_recurrent(L, chunk, rng):
+    cfg = _cfg("xlstm-125m", ssm_chunk=chunk)
+    params = materialize(ssm.mlstm_specs(cfg), jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, L, cfg.d_model)) * 0.5, jnp.float32)
+    y_chunk = ssm.mlstm_train(params, cfg, x)
+    y_step, _ = _roll(ssm.mlstm_step, ssm.mlstm_init_state, params, cfg, x)
+    np.testing.assert_allclose(y_chunk, y_step, atol=3e-4, rtol=1e-3)
+
+
+def test_slstm_scan_equals_step(rng):
+    cfg = _cfg("xlstm-125m")
+    params = materialize(ssm.slstm_specs(cfg), jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, 24, cfg.d_model)) * 0.5, jnp.float32)
+    y_scan, fin = ssm.slstm_train(params, cfg, x, return_state=True)
+    y_step, fin_step = _roll(ssm.slstm_step, ssm.slstm_init_state,
+                             params, cfg, x)
+    np.testing.assert_allclose(y_scan, y_step, atol=1e-5)
+    np.testing.assert_allclose(fin["h"], fin_step["h"], atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 3), st.sampled_from([8, 16, 32]),
+       st.integers(0, 2 ** 31 - 1))
+def test_mamba2_state_continuation(B, L, seed):
+    """Property: chunked prefill state + one exact step == recurrent roll
+    over L+1 tokens (causal state handoff is exact)."""
+    cfg = _cfg("zamba2-2.7b", ssm_chunk=8)
+    params = materialize(ssm.mamba2_specs(cfg), jax.random.key(1))
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((B, L + 1, cfg.d_model)) * 0.5,
+                    jnp.float32)
+    y_ref, _ = _roll(ssm.mamba2_step, ssm.mamba2_init_state, params, cfg, x)
+    _, st_ = ssm.mamba2_train(params, cfg, x[:, :L], return_state=True)
+    y_last, _ = ssm.mamba2_step(params, cfg, x[:, L:L + 1], st_)
+    np.testing.assert_allclose(y_ref[:, -1], y_last[:, 0], atol=3e-4, rtol=1e-2)
+
+
+def test_mamba2_decay_bounded(rng):
+    """SSM decays must be in (0, 1]: state cannot grow without input."""
+    cfg = _cfg("zamba2-2.7b")
+    params = materialize(ssm.mamba2_specs(cfg), jax.random.key(0))
+    st_ = ssm.mamba2_init_state(cfg, 2)
+    st_ = {**st_, "s": jnp.ones_like(st_["s"])}
+    x = jnp.zeros((2, 1, cfg.d_model), jnp.float32)
+    _, st2 = ssm.mamba2_step(params, cfg, x, st_)
+    assert float(jnp.max(jnp.abs(st2["s"]))) <= 1.0 + 1e-5
