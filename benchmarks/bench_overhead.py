@@ -1,8 +1,17 @@
 """Paper Fig. 15: camera-side overhead breakdown — RGB->HSV conversion,
 background subtraction, color-feature extraction, utility calculation.
-Median wall-clock per frame on this host (the paper used a Jetson TX1);
-also reports the Pallas-kernel path (interpret mode on CPU — the TPU
-target numbers come from the roofline, not wall time)."""
+Median wall-clock per frame on this host (the paper used a Jetson TX1).
+
+Reports two paths:
+  * the seed *staged* path — four separate host/device steps per frame
+    (numpy RGB->HSV, numpy background model, jitted PF extraction,
+    jitted utility score), i.e. multiple device round-trips per frame;
+  * the *fused* ingest path — one device dispatch per 64-frame batch
+    (``ingest_stream``: Pallas kernel on TPU, jitted jnp oracle on CPU),
+    which is what the shedder actually runs.
+``fused_ms`` / ``supports_fps_fused`` track the speedup of this PR's
+fused pipeline over the staged baseline in BENCH_*.json.
+"""
 from __future__ import annotations
 
 import time
@@ -15,7 +24,7 @@ from repro.core import RED, train_utility_model
 from repro.core.colors import rgb_to_hsv_np
 from repro.core.utility import pixel_fraction_matrix
 from repro.data.background import RunningAverageBackground
-from repro.data.pipeline import features_from_hsv
+from repro.data.pipeline import features_from_hsv, ingest_stream
 from benchmarks.common import Timer, dataset
 
 
@@ -42,6 +51,7 @@ def run(quick=True):
         i[0] = (i[0] + 1) % len(hsv)
         return i[0]
 
+    # --- seed staged path: four separate per-frame steps
     t_rgb2hsv = _median_time(lambda: rgb_to_hsv_np(rgb[next_idx()]))
     t_bgsub = _median_time(lambda: bg(hsv[next_idx()]))
 
@@ -62,6 +72,20 @@ def run(quick=True):
         lambda: score(jnp.asarray(pfs[next_idx()])).block_until_ready())
 
     total = t_rgb2hsv + t_bgsub + t_feat + t_util
+
+    # --- fused ingest path: one device dispatch per frame batch,
+    # RGB->HSV + bg subtraction + PF + utility all inside
+    batch = 64
+    rgbf = rgb.astype(np.float32)
+    frames = rgbf[:batch] if len(rgbf) >= batch else rgbf
+
+    def fused_once():
+        ingest_stream(frames, [RED], model, batch=batch)
+
+    fused_once()  # compile
+    t_fused_batch = _median_time(fused_once, n=10)
+    fused_ms = t_fused_batch / len(frames)
+
     return {"us_per_call": total * 1e3,
             "derived": {
                 "rgb2hsv_ms": t_rgb2hsv,
@@ -70,6 +94,9 @@ def run(quick=True):
                 "utility_calc_ms": t_util,
                 "total_ms": total,
                 "supports_fps": 1000.0 / total,
+                "fused_ms": fused_ms,
+                "supports_fps_fused": 1000.0 / fused_ms,
+                "fused_speedup": total / fused_ms,
             }}
 
 

@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus saves full JSON to
 results/benchmarks/).
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full | --quick] [--only NAME]
+
+``--quick`` (also the default) runs test-scale sizes — the CI smoke
+invocation documented in ROADMAP.md; ``--full`` runs paper-scale sizes.
 """
 from __future__ import annotations
 
@@ -28,8 +31,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
+    ap.add_argument("--quick", action="store_true",
+                    help="test-scale sizes (the default; explicit flag "
+                         "for CI smoke invocations)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
 
     outdir = Path("results/benchmarks")
     outdir.mkdir(parents=True, exist_ok=True)

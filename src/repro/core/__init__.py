@@ -11,6 +11,7 @@ from repro.core.utility import (
     B_S,
     B_V,
     UtilityModel,
+    batch_utilities,
     frame_features,
     hue_fraction,
     pixel_fraction_matrix,
@@ -22,6 +23,6 @@ __all__ = [
     "ControlLoop", "LatencyInputs",
     "drop_rate", "overall_qor", "per_object_qor",
     "UtilityQueue", "LoadShedder", "ShedderStats", "UtilityCDF",
-    "B_S", "B_V", "UtilityModel", "frame_features", "hue_fraction",
-    "pixel_fraction_matrix", "train_utility_model",
+    "B_S", "B_V", "UtilityModel", "batch_utilities", "frame_features",
+    "hue_fraction", "pixel_fraction_matrix", "train_utility_model",
 ]

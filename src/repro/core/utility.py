@@ -13,6 +13,7 @@ the training/runtime logic around it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
@@ -24,6 +25,15 @@ from repro.core.colors import Color, hue_mask, rgb_to_hsv_jnp
 
 B_S = 8   # saturation bins (paper §V-B: 8x8, bin size 32)
 B_V = 8   # value bins
+
+
+def joint_bin_index(s, v, bs: int = B_S, bv: int = B_V):
+    """Joint (sat, val) bin index in [0, bs*bv). The single definition of
+    the binning formula — the Pallas kernel, the jnp oracle and this
+    module's PF matrix all share it, so they cannot drift apart."""
+    sb = jnp.clip((s * (bs / 256.0)).astype(jnp.int32), 0, bs - 1)
+    vb = jnp.clip((v * (bv / 256.0)).astype(jnp.int32), 0, bv - 1)
+    return sb * bv + vb
 
 
 def hue_fraction(hsv, color: Color, fg_mask=None):
@@ -45,16 +55,22 @@ def pixel_fraction_matrix(hsv, color: Color, fg_mask=None,
     hsv: (..., H, W, 3) with channels (hue, sat, val).
     Returns (..., bs, bv) float32; rows sum to 1 where the frame has any
     color pixels, all-zero otherwise.
+
+    Memory-lean formulation: the joint (sat, val) bin histogram is a
+    segment-sum over bin indices — O(H*W + bins) live memory instead of
+    materializing an (H, W, bs*bv) one-hot tensor.
     """
     h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]
     m = hue_mask(h, color)
     if fg_mask is not None:
         m = m & fg_mask
-    sb = jnp.clip((s / (256 // bs)).astype(jnp.int32), 0, bs - 1)
-    vb = jnp.clip((v / (256 // bv)).astype(jnp.int32), 0, bv - 1)
-    joint = sb * bv + vb                                        # (..., H, W)
-    onehot = jax.nn.one_hot(joint, bs * bv, dtype=jnp.float32)
-    counts = jnp.sum(onehot * m[..., None].astype(jnp.float32), axis=(-3, -2))
+    joint = joint_bin_index(s, v, bs, bv)                       # (..., H, W)
+    lead = joint.shape[:-2]
+    npix = joint.shape[-2] * joint.shape[-1]
+    w = m.astype(jnp.float32)
+    counts = jax.vmap(
+        lambda jj, ww: jax.ops.segment_sum(ww, jj, num_segments=bs * bv)
+    )(joint.reshape(-1, npix), w.reshape(-1, npix)).reshape(*lead, bs * bv)
     total = jnp.sum(m, axis=(-2, -1)).astype(jnp.float32)
     pf = counts / jnp.maximum(total, 1.0)[..., None]
     return pf.reshape(*pf.shape[:-1], bs, bv)
@@ -90,6 +106,25 @@ class UtilityModel:
         if self.op == "or" or self.op == "single":
             return jnp.max(u, axis=-1)
         raise ValueError(self.op)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def _score_batch_jit(pfs, M_pos, norm, op):
+    u = jnp.sum(pfs * M_pos[None], axis=(-2, -1)) / jnp.maximum(norm, 1e-9)
+    return jnp.min(u, axis=-1) if op == "and" else jnp.max(u, axis=-1)
+
+
+def batch_utilities(model: "UtilityModel", pfs) -> np.ndarray:
+    """Score a stack of PF matrices in ONE jitted device call.
+
+    pfs: (N, n_colors, bs, bv). Replaces per-frame Python ``float()``
+    scoring loops on the serving path (one dispatch per batch, cached
+    trace per (shape, op))."""
+    if model.op not in ("single", "or", "and"):
+        raise ValueError(model.op)
+    return np.asarray(_score_batch_jit(
+        jnp.asarray(pfs, jnp.float32), jnp.asarray(model.M_pos, jnp.float32),
+        jnp.asarray(model.norm, jnp.float32), model.op))
 
 
 def train_utility_model(pfs, labels, colors: Sequence[Color],

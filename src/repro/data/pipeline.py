@@ -1,8 +1,11 @@
 """Host-side data pipelines.
 
 Video path (paper Fig. 8): camera-side RGB->HSV + background subtraction
-+ PF feature extraction, multi-camera interleaving into one frame-record
-stream for the Load Shedder.
++ PF feature extraction + utility scoring, fused into ONE device
+dispatch per frame batch (``repro.kernels.hsv_features.ops
+.ingest_pipeline`` — the Pallas kernel on TPU, its jitted jnp oracle
+elsewhere), with background state carried across batches. Multi-camera
+interleaving merges per-camera record streams for the Load Shedder.
 
 LM path: a seeded synthetic token stream (Zipfian bigram chain — learnable
 structure so example training shows decreasing loss) with double-buffered
@@ -10,42 +13,94 @@ prefetch, sharding-aware device_put, and per-host batching.
 """
 from __future__ import annotations
 
+import functools
 import queue as _q
 import threading
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.colors import Color
-from repro.core.utility import pixel_fraction_matrix
-from repro.data.background import batch_foreground
+from repro.core.utility import UtilityModel, pixel_fraction_matrix
 from repro.data.synthetic import VideoScenario, combined_label, combined_objects
+from repro.kernels.hsv_features.ops import IngestState, ingest_pipeline
 
 
 # ---------------------------------------------------------------------------
 # Video features
 # ---------------------------------------------------------------------------
 
-def features_from_hsv(frames_hsv: np.ndarray, colors: Sequence[Color],
-                      fg_mask: Optional[np.ndarray] = None,
-                      batch: int = 64) -> np.ndarray:
-    """(T,H,W,3) HSV -> (T, n_colors, 8, 8) PF matrices (numpy)."""
-    T = frames_hsv.shape[0]
-    outs = []
+@functools.lru_cache(maxsize=None)
+def _pf_batch_fn(colors: Tuple[Color, ...], has_fg: bool,
+                 bs: int, bv: int):
+    """Jitted per-batch PF extractor, cached per (colors, fg presence) so
+    repeated calls reuse one trace instead of retracing every invocation."""
+    if has_fg:
+        @jax.jit
+        def one(hsv_b, fg_b):
+            return jnp.stack([pixel_fraction_matrix(hsv_b, c, fg_b, bs, bv)
+                              for c in colors], axis=-3)
+        return one
 
     @jax.jit
-    def one(hsv_b, fg_b):
-        return jnp.stack([pixel_fraction_matrix(hsv_b, c, fg_b)
+    def one_nofg(hsv_b):
+        return jnp.stack([pixel_fraction_matrix(hsv_b, c, None, bs, bv)
                           for c in colors], axis=-3)
+    return one_nofg
 
+
+def features_from_hsv(frames_hsv: np.ndarray, colors: Sequence[Color],
+                      fg_mask: Optional[np.ndarray] = None,
+                      batch: int = 64, bs: int = 8, bv: int = 8) -> np.ndarray:
+    """(T,H,W,3) HSV -> (T, n_colors, 8, 8) PF matrices (numpy).
+
+    Legacy staged path (separate background model, host-side batching);
+    the fused camera path is ``ingest_stream``.
+    """
+    T = frames_hsv.shape[0]
+    outs = []
+    fn = _pf_batch_fn(tuple(colors), fg_mask is not None, bs, bv)
     for i in range(0, T, batch):
         hsv_b = jnp.asarray(frames_hsv[i:i + batch])
-        fg_b = None if fg_mask is None else jnp.asarray(fg_mask[i:i + batch])
-        outs.append(np.asarray(one(hsv_b, fg_b)))
+        if fg_mask is None:
+            outs.append(np.asarray(fn(hsv_b)))
+        else:
+            outs.append(np.asarray(fn(hsv_b, jnp.asarray(fg_mask[i:i + batch]))))
     return np.concatenate(outs, axis=0)
+
+
+def ingest_stream(frames_rgb: np.ndarray, colors: Sequence[Color],
+                  model: Optional[UtilityModel] = None, *,
+                  state: Optional[IngestState] = None, batch: int = 64,
+                  use_foreground: bool = True, op: Optional[str] = None,
+                  impl: Optional[str] = None,
+                  interpret: Optional[bool] = None):
+    """Fused camera-side ingest over a (T, H, W, 3) RGB stream.
+
+    Chunks the stream into ``batch``-frame batches, each ONE fused device
+    dispatch (RGB->HSV + background subtraction + PF features + utility),
+    carrying the background state across batches — chunked output is
+    identical to one long batch.
+
+    Returns (pf (T, nc, 8, 8) np, hf (T, nc) np, util (T,) np | None,
+    state') — pass ``state'`` back in to continue the same stream.
+    """
+    T = frames_rgb.shape[0]
+    pfs, hfs, us = [], [], []
+    for i in range(0, T, batch):
+        pf, hf, u, state = ingest_pipeline(
+            frames_rgb[i:i + batch], colors, model, state=state,
+            use_foreground=use_foreground, op=op, impl=impl,
+            interpret=interpret)
+        pfs.append(np.asarray(pf))
+        hfs.append(np.asarray(hf))
+        if u is not None:
+            us.append(np.asarray(u))
+    util = np.concatenate(us) if us else None
+    return np.concatenate(pfs), np.concatenate(hfs), util, state
 
 
 @dataclass
@@ -62,15 +117,23 @@ class FrameRecord:
 
 def scenario_records(sc: VideoScenario, cam_id: int, colors: Sequence[Color],
                      op: str = "or", fps: float = 10.0,
-                     use_foreground: bool = True,
-                     t0: float = 0.0) -> List[FrameRecord]:
+                     use_foreground: bool = True, t0: float = 0.0,
+                     model: Optional[UtilityModel] = None,
+                     batch: int = 64) -> List[FrameRecord]:
+    """Camera stream -> FrameRecords via the fused ingest path (the
+    camera sees RGB; HSV conversion, background subtraction, PF features
+    and — when ``model`` is given — utility scores all happen in one
+    device dispatch per ``batch`` frames)."""
     names = [c.name for c in colors]
-    fg = batch_foreground(sc.frames_hsv) if use_foreground else None
-    pfs = features_from_hsv(sc.frames_hsv, colors, fg)
+    pfs, _hf, util, _state = ingest_stream(
+        sc.frames_rgb().astype(np.float32), colors, model,
+        batch=batch, use_foreground=use_foreground, op=op)
     labels = combined_label(sc, names, op)
     objs = combined_objects(sc, names)
     return [FrameRecord(cam_id, t, t0 + t / fps, pfs[t], bool(labels[t]),
-                        frozenset(objs[t]), bool(sc.busy[t]))
+                        frozenset(objs[t]), bool(sc.busy[t]),
+                        utility=float(util[t]) if util is not None
+                        else float("nan"))
             for t in range(sc.num_frames)]
 
 

@@ -1,20 +1,38 @@
-"""Jit'd public wrapper around the fused HSV feature kernel."""
+"""Public wrappers around the fused HSV ingest kernels.
+
+``ingest_pipeline`` is the camera-side hot path: a ``(T, H, W, 3)`` RGB
+frame batch goes device-side *once* and comes back as PF matrices, hue
+fractions and (when a trained model is supplied) utility scores, with
+the background-subtraction state ``IngestState`` carried explicitly
+across calls (chunked streaming scores identically to one long batch).
+
+Implementation dispatch is backend-aware: the Pallas kernel on TPU, the
+jitted pure-jnp oracle (one XLA computation, same math) elsewhere —
+Pallas has no compiled CPU lowering, and interpret mode is a debugging
+tool, not a serving path. ``impl``/``interpret`` can be forced for
+testing.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.colors import Color
-from repro.core.utility import B_S, B_V
-from repro.kernels.hsv_features.kernel import hsv_hist
-from repro.kernels.hsv_features.ref import pf_from_counts
+from repro.core.utility import B_S, B_V, UtilityModel
+from repro.kernels.hsv_features.kernel import (
+    default_interpret,
+    hsv_hist,
+    ingest_batch,
+)
+from repro.kernels.hsv_features.ref import ingest_batch_ref, pf_from_counts
 
 
 def frame_pf(rgb, fg, colors: Sequence[Color], bs: int = B_S, bv: int = B_V,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """One frame -> (pf (nc, bs, bv), hue_fraction (nc,)).
 
     rgb: (H, W, 3) float32 (0..255); fg: (H, W) bool.
@@ -29,8 +47,95 @@ def frame_pf(rgb, fg, colors: Sequence[Color], bs: int = B_S, bv: int = B_V,
 
 
 def batch_pf(rgb, fg, colors: Sequence[Color], bs: int = B_S, bv: int = B_V,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """(T, H, W, 3) -> (pf (T, nc, bs, bv), hf (T, nc)) via vmap."""
     f = functools.partial(frame_pf, colors=colors, bs=bs, bv=bv,
                           interpret=interpret)
     return jax.vmap(lambda a, b: f(a, b))(rgb, fg)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched ingest
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class IngestState:
+    """Background-model state carried across ingest batches."""
+    bg: jax.Array          # (N,) Value-channel background
+    gain: jax.Array        # () illumination gain estimate
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "hue_ranges", "bs", "bv", "alpha", "threshold", "use_fg", "bg_valid",
+    "op"))
+def _ingest_jnp(rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv,
+                alpha, threshold, use_fg, bg_valid, op):
+    return ingest_batch_ref(
+        rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv, alpha=alpha,
+        threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op)
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def ingest_pipeline(rgb, colors: Sequence[Color],
+                    model: Optional[UtilityModel] = None, *,
+                    state: Optional[IngestState] = None,
+                    alpha: float = 0.05, threshold: float = 18.0,
+                    use_foreground: bool = True, op: Optional[str] = None,
+                    bs: int = B_S, bv: int = B_V,
+                    impl: Optional[str] = None,
+                    interpret: Optional[bool] = None):
+    """Fused ingest for one frame batch — one device dispatch.
+
+    rgb: (T, H, W, 3) float32 RGB in [0, 255].
+    Returns (pf (T, nc, bs, bv), hf (T, nc), util (T,) | None, state').
+    ``util`` is None when no trained ``model`` is supplied.
+    """
+    impl = impl or default_impl()
+    hue_ranges = tuple(tuple(c.hue_ranges) for c in colors)
+    nc = len(hue_ranges)
+    T = rgb.shape[0]
+    n = rgb.shape[1] * rgb.shape[2]
+    rgb_flat = jnp.asarray(rgb, jnp.float32).reshape(T, n, 3)
+
+    bg_valid = state is not None
+    bg0 = state.bg if bg_valid else jnp.zeros((n,), jnp.float32)
+    gain0 = state.gain if bg_valid else jnp.float32(1.0)
+
+    if model is not None:
+        M_pos = jnp.asarray(model.M_pos, jnp.float32).reshape(nc, bs * bv)
+        norm = jnp.asarray(model.norm, jnp.float32)
+        # the trained model defines how per-color utilities compose; a
+        # caller-supplied op (e.g. the label op) must not override it
+        op = model.op
+    else:
+        M_pos = jnp.zeros((nc, bs * bv), jnp.float32)
+        norm = jnp.ones((nc,), jnp.float32)
+        op = op or "or"
+    if op == "single":
+        op = "or"
+    if op not in ("or", "and"):
+        raise ValueError(f"unknown composition op {op!r}")
+
+    if impl == "pallas":
+        counts, totals, fgtot, util, bg, gain = ingest_batch(
+            rgb_flat, bg0, gain0, M_pos, norm, hue_ranges, bs, bv,
+            alpha=alpha, threshold=threshold, use_fg=use_foreground,
+            bg_valid=bg_valid, op=op, interpret=interpret)
+    elif impl == "jnp":
+        counts, totals, fgtot, util, bg, gain = _ingest_jnp(
+            rgb_flat, bg0, gain0, M_pos, norm, hue_ranges, bs, bv,
+            alpha, threshold, use_foreground, bg_valid, op)
+    else:
+        raise ValueError(f"unknown ingest impl {impl!r}")
+
+    pf = pf_from_counts(counts, totals, bs, bv)
+    hf = totals / jnp.maximum(fgtot, 1.0)[:, None]
+    new_state = IngestState(bg=bg, gain=gain)
+    return pf, hf, (util if model is not None else None), new_state
+
+
+__all__ = ["frame_pf", "batch_pf", "ingest_pipeline", "IngestState",
+           "default_impl", "default_interpret"]

@@ -1,18 +1,46 @@
-"""Pure-jnp oracle for the fused HSV feature kernel.
+"""Pure-jnp oracle for the fused HSV ingest kernels.
 
-Given RGB pixels, a foreground mask, and a static list of colors (hue
-ranges), produce per-color:
-  counts  (n_colors, B_S * B_V)  — pixels per (sat, val) bin (hue-masked)
-  totals  (n_colors,)            — total hue-masked foreground pixels
-  fg_total ()                    — total foreground pixels
-from which PF matrices (Eq. 10) and hue fractions (Eq. 6) follow.
+Two levels:
+
+``hsv_hist_ref``
+    Histogram-only oracle (precomputed foreground mask), mirroring
+    ``kernel.hsv_hist``. Memory-lean: per-color histograms come from a
+    ``segment_sum`` over the joint (sat, val) bin index — no
+    ``(N, bins)`` one-hot is ever materialized.
+
+``ingest_batch_ref``
+    End-to-end oracle for ``kernel.ingest_batch``: RGB->HSV, EMA
+    background subtraction with one-frame-lagged mean-gain illumination
+    compensation (a ``lax.scan`` over frames — bit-for-bit the state
+    recurrence the kernel runs across its frame grid dimension),
+    per-color PF histograms, and the utility score. Also the *compiled
+    CPU fast path*: jitted as one XLA computation it has exactly one
+    device round-trip per frame batch, which is what the edge deployment
+    needs when no TPU is present.
+
+Both share the kernel's state-carry contract: pass ``(bg, gain)`` from
+one batch to the next and a chunked stream scores identically to one
+long batch.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.colors import rgb_to_hsv_jnp
-from repro.core.utility import B_S, B_V
+from repro.core.utility import B_S, B_V, joint_bin_index
+from repro.data.background import GAIN_MAX, GAIN_MIN
+
+
+def color_masks(h, hue_ranges):
+    """(nc, ...) bool hue masks."""
+    ms = []
+    for ranges in hue_ranges:
+        m = jnp.zeros(h.shape, bool)
+        for lo, hi in ranges:
+            m |= (h >= lo) & (h < hi)
+        ms.append(m)
+    return jnp.stack(ms)
 
 
 def hsv_hist_ref(rgb, fg, hue_ranges, bs: int = B_S, bv: int = B_V):
@@ -25,21 +53,79 @@ def hsv_hist_ref(rgb, fg, hue_ranges, bs: int = B_S, bv: int = B_V):
     hsv = rgb_to_hsv_jnp(rgb)
     h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]
     fgf = fg.astype(jnp.float32)
-    sb = jnp.clip((s / (256 // bs)).astype(jnp.int32), 0, bs - 1)
-    vb = jnp.clip((v / (256 // bv)).astype(jnp.int32), 0, bv - 1)
-    joint = sb * bv + vb
-    counts, totals = [], []
-    for ranges in hue_ranges:
-        m = jnp.zeros(h.shape, bool)
-        for lo, hi in ranges:
-            m |= (h >= lo) & (h < hi)
-        mf = m.astype(jnp.float32) * fgf
-        onehot = (joint[None, :] == jnp.arange(bs * bv)[:, None]).astype(jnp.float32)
-        counts.append(jnp.sum(onehot * mf[None, :], axis=1))
-        totals.append(jnp.sum(mf))
-    return (jnp.stack(counts), jnp.stack(totals), jnp.sum(fgf))
+    joint = joint_bin_index(s, v, bs, bv)
+    weights = color_masks(h, hue_ranges).astype(jnp.float32) * fgf[None]
+    counts = jax.vmap(
+        lambda w: jax.ops.segment_sum(w, joint, num_segments=bs * bv)
+    )(weights)
+    return counts, jnp.sum(weights, axis=-1), jnp.sum(fgf)
 
 
 def pf_from_counts(counts, totals, bs: int = B_S, bv: int = B_V):
     pf = counts / jnp.maximum(totals[..., None], 1.0)
     return pf.reshape(*counts.shape[:-1], bs, bv)
+
+
+# ---------------------------------------------------------------------------
+# Batched end-to-end ingest oracle
+# ---------------------------------------------------------------------------
+
+def ema_background_scan(v_frames, bg0, gain0, *, alpha=0.05, threshold=18.0,
+                        bg_valid=True):
+    """The kernel's background recurrence as a lax.scan.
+
+    v_frames: (T, N) Value channel. Returns (fg (T, N) bool, bg (N,),
+    gain ()). With ``bg_valid=False`` frame 0 seeds the background
+    (yielding an all-background mask), like the host model's first call.
+    """
+    if not bg_valid:
+        bg0 = v_frames[0]
+
+    def step(carry, v):
+        bg, gain = carry
+        gain = jnp.clip(gain, GAIN_MIN, GAIN_MAX)
+        comp = v / gain
+        fg = jnp.abs(comp - bg) > threshold
+        new_bg = (1.0 - alpha) * bg + alpha * comp
+        new_gain = jnp.clip(jnp.sum(v) / jnp.maximum(jnp.sum(bg), 1e-6),
+                            GAIN_MIN, GAIN_MAX)
+        return (new_bg, new_gain), fg
+
+    (bg, gain), fg = jax.lax.scan(
+        step, (bg0.astype(jnp.float32), jnp.asarray(gain0, jnp.float32)),
+        v_frames)
+    return fg, bg, gain
+
+
+def ingest_batch_ref(rgb, bg0, gain0, M_pos, norm, hue_ranges,
+                     bs: int = B_S, bv: int = B_V, *, alpha: float = 0.05,
+                     threshold: float = 18.0, use_fg: bool = True,
+                     bg_valid: bool = True, op: str = "or"):
+    """Oracle for ``kernel.ingest_batch`` (same signature/returns).
+
+    rgb: (T, N, 3) float32. Returns (counts (T, nc, bs*bv),
+    totals (T, nc), fg_total (T,), utility (T,), bg (N,), gain ()).
+    """
+    hsv = rgb_to_hsv_jnp(rgb)
+    h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]      # (T, N)
+    fg, bg, gain = ema_background_scan(
+        v, bg0, gain0, alpha=alpha, threshold=threshold, bg_valid=bg_valid)
+    fgf = fg.astype(jnp.float32) if use_fg else jnp.ones_like(v)
+
+    joint = joint_bin_index(s, v, bs, bv)                    # (T, N)
+    masks = color_masks(h, hue_ranges)                   # (nc, T, N)
+    weights = masks.astype(jnp.float32) * fgf[None]
+
+    def hist_frame(joint_t, w_t):                        # (N,), (nc, N)
+        return jax.vmap(lambda w: jax.ops.segment_sum(
+            w, joint_t, num_segments=bs * bv))(w_t)
+
+    counts = jax.vmap(hist_frame)(joint, jnp.moveaxis(weights, 0, 1))
+    totals = jnp.sum(weights, axis=-1).T                 # (T, nc)
+    fgtot = jnp.sum(fgf, axis=-1)                        # (T,)
+
+    pf = counts / jnp.maximum(totals, 1.0)[..., None]
+    u = jnp.sum(pf * M_pos.reshape(1, *M_pos.shape), axis=-1)
+    u = u / jnp.maximum(norm, 1e-9)[None]
+    util = jnp.min(u, axis=-1) if op == "and" else jnp.max(u, axis=-1)
+    return counts, totals, fgtot, util, bg, gain

@@ -56,6 +56,15 @@ class ParamSpec:
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
 
 
+def use_mesh(mesh: Mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    where it exists (>= 0.6), else the classic ``with mesh:`` global-mesh
+    context (0.4.x)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def is_spec(x) -> bool:
     return isinstance(x, ParamSpec)
 

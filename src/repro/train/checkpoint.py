@@ -19,9 +19,14 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to uncompressed checkpoints when unavailable
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _SEP = "/"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _flatten(tree):
@@ -53,7 +58,8 @@ def save(path: os.PathLike, step: int, tree: Any, metadata: Optional[dict] = Non
             },
         }
         raw = msgpack.packb(payload, use_bin_type=True)
-        comp = zstandard.ZstdCompressor(level=3).compress(raw)
+        comp = (zstandard.ZstdCompressor(level=3).compress(raw)
+                if zstandard is not None else raw)
         tmp = path / f".tmp.{step}.ckpt"
         final = path / f"{step:010d}.ckpt"
         with open(tmp, "wb") as f:
@@ -87,8 +93,12 @@ def restore(path: os.PathLike, template: Any, *, step: Optional[int] = None,
     step = step if step is not None else latest_step(path)
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {path}")
-    raw = zstandard.ZstdDecompressor().decompress(
-        (path / f"{step:010d}.ckpt").read_bytes())
+    raw = (path / f"{step:010d}.ckpt").read_bytes()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not installed")
+        raw = zstandard.ZstdDecompressor().decompress(raw)
     payload = msgpack.unpackb(raw, raw=False)
     arrays = payload["arrays"]
 

@@ -30,7 +30,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.models import lm_specs, lm_loss
-from repro.sharding.api import materialize, spec_shardings
+from repro.sharding.api import materialize, spec_shardings, use_mesh
 cfg = get_smoke_config('smollm-135m')
 specs = lm_specs(cfg)
 params = materialize(specs, jax.random.key(0))
@@ -40,7 +40,7 @@ l1, _ = jax.jit(lambda p, b: lm_loss(cfg, p, b))(params, batch)
 
 mesh = jax.make_mesh((2, 2), ('data', 'model'))
 sh = spec_shardings(specs, mesh)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     ps = jax.device_put(params, sh)
     bs = {k: jax.device_put(v, NamedSharding(mesh, P('data', None)))
           for k, v in batch.items()}
@@ -56,7 +56,7 @@ def test_pipeline_parallel_matches_unpipelined():
 import jax, jax.numpy as jnp, numpy as np, dataclasses
 from repro.configs import get_smoke_config, scaled
 from repro.models import lm_specs, lm_loss
-from repro.sharding.api import materialize
+from repro.sharding.api import materialize, use_mesh
 from repro.train.pipeline_parallel import make_pp_loss
 cfg = scaled(get_smoke_config('smollm-135m'), num_layers=4, remat='none')
 specs = lm_specs(cfg)
@@ -67,13 +67,13 @@ ref, _ = jax.jit(lambda p, b: lm_loss(cfg, p, b))(params, batch)
 
 mesh = jax.make_mesh((4,), ('stage',))
 pp_loss = make_pp_loss(cfg, mesh, num_microbatches=4)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     lp = jax.jit(pp_loss)(params, batch)
 print('PP', float(ref), float(lp))
 assert abs(float(ref) - float(lp)) < 5e-3, (float(ref), float(lp))
 
 # gradients flow through all stages
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     g = jax.jit(jax.grad(pp_loss))(params, batch)
 gn = [float(jnp.sum(jnp.abs(x))) for x in jax.tree_util.tree_leaves(g['blocks'])]
 assert all(v > 0 for v in gn), gn
@@ -87,7 +87,7 @@ def test_dp_compressed_training_converges():
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_smoke_config, scaled
 from repro.models import lm_specs, lm_loss
-from repro.sharding.api import materialize
+from repro.sharding.api import materialize, use_mesh
 from repro.train.compression import make_dp_compressed_train_step
 from repro.train.optimizer import AdamW, constant_lr
 from repro.data.pipeline import BigramStream
@@ -104,7 +104,7 @@ opt_state = opt.init(params)
 stream = BigramStream(cfg.vocab_size, seed=0)
 rng = np.random.default_rng(0)
 losses = []
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jstep = jax.jit(step)
     for i in range(60):
         toks = stream.sample(rng, 8, 32)
@@ -124,7 +124,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.models import lm_specs
-from repro.sharding.api import materialize, spec_shardings, spec_shapes
+from repro.sharding.api import materialize, spec_shardings, spec_shapes, use_mesh
 from repro.train import checkpoint as ckpt
 import tempfile, numpy as np
 
