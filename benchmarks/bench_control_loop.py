@@ -8,10 +8,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import RED, overall_qor, train_utility_model
+from repro.core import RED, Query, open_session, overall_qor, train_utility_model
 from repro.data.pipeline import FrameRecord, scenario_records
 from repro.data.synthetic import generate_dataset, generate_scenario
-from repro.serve.simulator import BackendProfile, PipelineSimulator, build_shedder
+from repro.serve.simulator import BackendProfile, PipelineSimulator
 from benchmarks.common import FPS, Timer, dataset, train_model
 
 
@@ -50,7 +50,8 @@ def run(quick=True):
     recs = _stitched(seg)
     us = [float(model.score(r.pf)) for r in recs]
     lb = 1.0
-    sh = build_shedder(model, train_us, latency_bound=lb, fps=FPS)
+    sh = open_session(Query.single(RED, latency_bound=lb, fps=FPS),
+                      num_cameras=1, model=model, train_utilities=train_us)
     with Timer() as t:
         res = PipelineSimulator(sh, BackendProfile(), tokens=1, seed=0).run(recs, us)
 

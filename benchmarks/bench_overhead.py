@@ -14,8 +14,6 @@ fused pipeline over the staged baseline in BENCH_*.json.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,16 +23,7 @@ from repro.core.colors import rgb_to_hsv_np
 from repro.core.utility import pixel_fraction_matrix
 from repro.data.background import RunningAverageBackground
 from repro.data.pipeline import features_from_hsv, ingest_stream
-from benchmarks.common import Timer, dataset
-
-
-def _median_time(fn, n=30):
-    ts = []
-    for _ in range(n):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)) * 1e3  # ms
+from benchmarks.common import dataset, median_ms
 
 
 def run(quick=True):
@@ -52,13 +41,13 @@ def run(quick=True):
         return i[0]
 
     # --- seed staged path: four separate per-frame steps
-    t_rgb2hsv = _median_time(lambda: rgb_to_hsv_np(rgb[next_idx()]))
-    t_bgsub = _median_time(lambda: bg(hsv[next_idx()]))
+    t_rgb2hsv = median_ms(lambda: rgb_to_hsv_np(rgb[next_idx()]))
+    t_bgsub = median_ms(lambda: bg(hsv[next_idx()]))
 
     fg = np.stack([bg(f) for f in hsv])
     feat_fn = jax.jit(lambda h, m: pixel_fraction_matrix(h, RED, m))
     feat_fn(jnp.asarray(hsv[0]), jnp.asarray(fg[0])).block_until_ready()
-    t_feat = _median_time(
+    t_feat = median_ms(
         lambda: feat_fn(jnp.asarray(hsv[next_idx()]),
                         jnp.asarray(fg[next_idx()])).block_until_ready())
 
@@ -68,7 +57,7 @@ def run(quick=True):
     Mj = jnp.asarray(model.M_pos)
     score = jax.jit(lambda pf: jnp.sum(pf * Mj) / model.norm[0])
     score(jnp.asarray(pfs[0])).block_until_ready()
-    t_util = _median_time(
+    t_util = median_ms(
         lambda: score(jnp.asarray(pfs[next_idx()])).block_until_ready())
 
     total = t_rgb2hsv + t_bgsub + t_feat + t_util
@@ -83,7 +72,7 @@ def run(quick=True):
         ingest_stream(frames, [RED], model, batch=batch)
 
     fused_once()  # compile
-    t_fused_batch = _median_time(fused_once, n=10)
+    t_fused_batch = median_ms(fused_once, n=10)
     fused_ms = t_fused_batch / len(frames)
 
     return {"us_per_call": total * 1e3,

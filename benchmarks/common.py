@@ -55,3 +55,14 @@ class Timer:
     @property
     def us(self):
         return self.dt * 1e6
+
+
+def median_ms(fn, n: int = 30) -> float:
+    """Median wall-clock of ``fn()`` over ``n`` calls, in milliseconds.
+    The shared benchmark timer — warm compiles before calling this."""
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e3

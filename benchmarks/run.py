@@ -34,7 +34,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="test-scale sizes (the default; explicit flag "
                          "for CI smoke invocations)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", nargs="+", default=None,
+                    help="run only benchmarks whose name contains any of "
+                         "these substrings")
     args = ap.parse_args()
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -44,7 +46,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for name, mod_name in BENCHES:
-        if args.only and args.only not in name:
+        if args.only and not any(sub in name for sub in args.only):
             continue
         try:
             import importlib

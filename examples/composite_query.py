@@ -1,36 +1,40 @@
 """Composite color queries (paper §IV-B6 / §V-D2): RED OR YELLOW and
 RED AND YELLOW utility functions, threshold sweeps on unseen video.
 
+The five videos are treated as one five-camera array: a single
+``session.ingest`` scores every camera's batch in ONE fused device
+dispatch (per-camera background lanes), replacing the old staged
+host-side background + feature path.
+
     PYTHONPATH=src python examples/composite_query.py
 """
 import numpy as np
 
-from repro.core import COLORS, RED, YELLOW, overall_qor, train_utility_model
-from repro.data.background import batch_foreground
-from repro.data.pipeline import features_from_hsv
+from repro.core import Query, batch_utilities, open_session, overall_qor
 from repro.data.synthetic import combined_label, combined_objects, generate_dataset
 
 
 def main():
     videos = generate_dataset(range(5), num_frames=300, height=48, width=80)
-    colors = [RED, YELLOW]
     names = ["red", "yellow"]
 
-    feats, labels = [], []
-    for v in videos:
-        fg = batch_foreground(v.frames_hsv)
-        feats.append(features_from_hsv(v.frames_hsv, colors, fg))
-        labels.append(np.stack([v.labels[n] for n in names], 1))
+    for op, query in (("or", Query.any_of(*names)),
+                      ("and", Query.all_of(*names))):
+        # five cameras, one fused dispatch per 64-frame batch
+        session = open_session(query, num_cameras=5, frame_shape=(48, 80))
+        frames = np.stack([v.frames_rgb().astype(np.float32) for v in videos])
+        pf_chunks = [session.ingest(frames[:, i:i + 64]).pf
+                     for i in range(0, frames.shape[1], 64)]
+        pfs = np.concatenate(pf_chunks, axis=1)        # (5, T, nc, 8, 8)
 
-    train_pf = np.concatenate(feats[:4])
-    train_lab = np.concatenate(labels[:4])
-
-    for op in ("or", "and"):
-        model = train_utility_model(train_pf, train_lab, colors, op=op)
-        us = np.asarray([float(model.score(pf)) for pf in feats[4]])
+        labels = np.stack([np.stack([v.labels[n] for n in names], 1)
+                           for v in videos])           # (5, T, nc)
+        model = session.fit(pfs[:4].reshape(-1, *pfs.shape[2:]),
+                            labels[:4].reshape(-1, 2))
+        us = batch_utilities(model, pfs[4])
         lab = combined_label(videos[4], names, op)
         objs = combined_objects(videos[4], names)
-        print(f"\n== {op.upper()} query on unseen video ==")
+        print(f"\n== {op.upper()} query on unseen camera ==")
         if lab.any():
             print(f"utility: positives {us[lab].mean():.3f} "
                   f"vs negatives {us[~lab].mean():.3f}")

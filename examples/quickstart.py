@@ -1,38 +1,43 @@
-"""Quickstart: train a utility function, shed a video stream, measure QoR.
+"""Quickstart: open a session, train its utility function, shed a video
+stream, measure QoR.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import RED, overall_qor, train_utility_model
+from repro.core import Query, open_session, overall_qor
 from repro.data.pipeline import scenario_records
 from repro.data.synthetic import generate_dataset
-from repro.serve.simulator import BackendProfile, PipelineSimulator, build_shedder
+from repro.serve.simulator import BackendProfile, PipelineSimulator
 
 
 def main():
-    # 1. synthesize a small VisualRoad-like dataset (4 cameras)
+    # 1. declare the query and open a shedding session for one camera
+    query = Query.single("red", latency_bound=1.0, fps=10.0)
+    session = open_session(query, num_cameras=1, frame_shape=(48, 80))
+
+    # 2. synthesize a small VisualRoad-like dataset (4 cameras)
     print("== generating synthetic city-camera videos ==")
     videos = generate_dataset(range(4), num_frames=300, height=48, width=80)
 
-    # 2. train the utility function on three videos (labels included)
+    # 3. train the utility function on three videos (labels included);
+    #    fit() also seeds the admission threshold CDF
     train_recs = [r for i, v in enumerate(videos[:3])
-                  for r in scenario_records(v, i, [RED])]
+                  for r in scenario_records(v, i, list(query.colors))]
     pfs = np.stack([r.pf for r in train_recs])
     labels = np.array([r.label for r in train_recs])
-    model = train_utility_model(pfs, labels, [RED])
-    train_us = [float(model.score(r.pf)) for r in train_recs]
-    print(f"trained on {len(train_recs)} frames, "
-          f"{labels.sum()} positive")
+    model = session.fit(pfs, labels)
+    print(f"trained on {len(train_recs)} frames, {labels.sum()} positive")
 
-    # 3. run the full shedding pipeline on the unseen video
-    test_recs = scenario_records(videos[3], 99, [RED], fps=10.0)
-    us = [float(model.score(r.pf)) for r in test_recs]
-    shedder = build_shedder(model, train_us, latency_bound=1.0, fps=10.0)
-    result = PipelineSimulator(shedder, BackendProfile(), tokens=1).run(
+    # 4. run the full shedding pipeline on the unseen video — the fused
+    #    ingest path scores utilities in-pipeline (one dispatch per batch)
+    test_recs = scenario_records(videos[3], 99, list(query.colors),
+                                 fps=query.fps, model=model)
+    us = [r.utility for r in test_recs]
+    result = PipelineSimulator(session, BackendProfile(), tokens=1).run(
         test_recs, us)
 
-    # 4. report
+    # 5. report
     objs = [r.objects for r in test_recs]
     lat = result.e2e_latencies()
     print(f"\n== results on unseen video ==")
@@ -41,7 +46,7 @@ def main():
     print(f"drop rate          : {result.stats['drop_rate']:.2f}")
     print(f"QoR (per-object)   : {overall_qor(objs, result.kept_mask):.3f}")
     print(f"p99 E2E latency    : {np.percentile(lat, 99)*1e3:.0f} ms "
-          f"(bound: 1000 ms)")
+          f"(bound: {query.latency_bound*1e3:.0f} ms)")
     print(f"latency violations : {result.violations}")
 
 

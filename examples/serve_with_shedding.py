@@ -1,8 +1,9 @@
-"""Serve a real JAX model behind the utility-aware Load Shedder.
+"""Serve a real JAX model behind a multi-camera shedding session.
 
 The backend 'Application Query' is an actual jitted LM forward (the
-paper's EfficientDet slot); the Load Shedder + control loop keep E2E
-latency bounded as ingress exceeds backend throughput.
+paper's EfficientDet slot); one ``ShedSession`` fronts the camera array
+(fused array scoring + per-camera admission), and the control loop
+keeps E2E latency bounded as ingress exceeds backend throughput.
 
     PYTHONPATH=src python examples/serve_with_shedding.py --frames 300
 """

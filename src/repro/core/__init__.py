@@ -1,6 +1,7 @@
 # The paper's primary contribution: utility-aware load shedding for
 # real-time video analytics (utility function, CDF threshold mapping,
-# control loop, utility-ordered bounded queue, QoR metrics).
+# control loop, utility-ordered bounded queue, QoR metrics), unified
+# behind the multi-camera session API (repro.core.session).
 from repro.core.colors import BLUE, COLORS, GREEN, RED, YELLOW, Color
 from repro.core.control import ControlLoop, LatencyInputs
 from repro.core.qor import drop_rate, overall_qor, per_object_qor
@@ -17,6 +18,13 @@ from repro.core.utility import (
     pixel_fraction_matrix,
     train_utility_model,
 )
+from repro.core.session import (
+    IngestResult,
+    Query,
+    SessionState,
+    ShedSession,
+    open_session,
+)
 
 __all__ = [
     "BLUE", "COLORS", "GREEN", "RED", "YELLOW", "Color",
@@ -25,4 +33,5 @@ __all__ = [
     "UtilityQueue", "LoadShedder", "ShedderStats", "UtilityCDF",
     "B_S", "B_V", "UtilityModel", "batch_utilities", "frame_features",
     "hue_fraction", "pixel_fraction_matrix", "train_utility_model",
+    "IngestResult", "Query", "SessionState", "ShedSession", "open_session",
 ]

@@ -13,6 +13,7 @@ queue is resized to the largest N meeting the bound (>= 1).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 class EWMA:
@@ -22,7 +23,7 @@ class EWMA:
     a load spike and the E2E bound is violated until convergence."""
 
     def __init__(self, alpha: float = 0.2, init: float = 0.0,
-                 alpha_up: float = None):
+                 alpha_up: Optional[float] = None):
         self.alpha = alpha
         self.alpha_up = alpha if alpha_up is None else alpha_up
         self.value = init

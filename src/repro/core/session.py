@@ -1,0 +1,605 @@
+"""Unified multi-camera shedding sessions: one query spec, one pytree
+state, one fused dispatch per camera array.
+
+The paper's Load Shedder is a per-camera pipeline (utility scoring ->
+admission threshold -> dynamic queue -> control loop); edge nodes serve
+many cameras at once, so the first-class unit here is the *camera
+array*:
+
+``Query``
+    Declarative query spec — target colors, OR/AND composition, E2E
+    latency budget, per-camera target FPS, feature-bin and
+    background-model constants. One compiled shedder per query.
+
+``SessionState``
+    An explicit JAX pytree of per-camera state lanes: ``(C, N)``
+    background rows and ``(C,)`` illumination gains (the fused ingest
+    kernel's carried state), per-camera utility-CDF ring buffers and
+    admission thresholds (Eq. 16–17), and the control loop's EWMAs
+    (Eq. 18–20). Every leaf is an array, so the whole thing
+    checkpoints through ``repro.train.checkpoint`` and round-trips the
+    serve path across restarts. The utility-ordered queues hold live
+    frame payloads and are deliberately *not* part of the state.
+
+``ShedSession``
+    The method surface every consumer builds on: ``ingest`` runs a
+    ``(C, T, H, W, 3)`` camera array through ONE fused Pallas/oracle
+    dispatch per batch (RGB->HSV + EMA background subtraction + PF
+    features + utility, per-camera state lanes carried across batches);
+    ``admit`` applies vectorized admission + queue decisions per
+    camera; ``offer``/``next_frame``/``tick`` are the frame-at-a-time
+    serving surface the pipeline simulator drives; ``checkpoint`` /
+    ``restore`` persist the state pytree.
+
+``open_session(query, num_cameras, ...)`` is the entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.colors import COLORS, Color
+from repro.core.control import LatencyInputs
+from repro.core.shed_queue import UtilityQueue
+from repro.core.shedder import ShedderStats
+from repro.core.threshold import threshold_from_sorted
+from repro.core.utility import (
+    B_S,
+    B_V,
+    UtilityModel,
+    batch_utilities,
+    train_utility_model,
+)
+from repro.kernels.hsv_features.ops import IngestState, ingest_pipeline
+
+# admit() decision codes — (C, T) int8 arrays, vectorized per camera
+ADMIT = 0
+SHED_ADMISSION = 1
+SHED_QUEUE = 2
+
+_DECISION_NAMES = {ADMIT: "queued", SHED_ADMISSION: "shed_admission",
+                   SHED_QUEUE: "shed_queue"}
+
+
+def _as_color(c: Union[str, Color]) -> Color:
+    if isinstance(c, Color):
+        return c
+    return COLORS[str(c).lower()]
+
+
+@dataclass(frozen=True)
+class Query:
+    """Declarative spec of what the camera array is watching for.
+
+    ``colors`` compose with ``op`` (Eq. 15: OR -> max, AND -> min over
+    normalized per-color utilities); ``latency_bound`` is the E2E
+    budget driving dynamic queue sizing (Eq. 20); ``fps`` is the
+    per-camera target ingress rate feeding the target drop rate
+    (Eq. 19). The remaining fields are the feature/background constants
+    baked into the compiled ingest kernel.
+    """
+    colors: Tuple[Color, ...]
+    op: str = "single"                  # single | or | and
+    latency_bound: float = 1.0          # seconds, E2E
+    fps: float = 10.0                   # per-camera target ingress FPS
+    bs: int = B_S                       # saturation bins
+    bv: int = B_V                       # value bins
+    alpha: float = 0.05                 # background EMA learning rate
+    threshold: float = 18.0             # foreground |diff| threshold
+    use_foreground: bool = True
+
+    def __post_init__(self) -> None:
+        colors = tuple(_as_color(c) for c in (
+            self.colors if isinstance(self.colors, (tuple, list))
+            else (self.colors,)))
+        object.__setattr__(self, "colors", colors)
+        if self.op not in ("single", "or", "and"):
+            raise ValueError(f"unknown composition op {self.op!r}")
+        if self.op == "single" and len(colors) > 1:
+            object.__setattr__(self, "op", "or")
+
+    @classmethod
+    def single(cls, color: Union[str, Color], **kw: Any) -> "Query":
+        return cls(colors=(_as_color(color),), op="single", **kw)
+
+    @classmethod
+    def any_of(cls, *colors: Union[str, Color], **kw: Any) -> "Query":
+        return cls(colors=tuple(_as_color(c) for c in colors), op="or", **kw)
+
+    @classmethod
+    def all_of(cls, *colors: Union[str, Color], **kw: Any) -> "Query":
+        return cls(colors=tuple(_as_color(c) for c in colors), op="and", **kw)
+
+    @property
+    def hue_ranges(self) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+        return tuple(tuple(c.hue_ranges) for c in self.colors)
+
+    @property
+    def num_colors(self) -> int:
+        return len(self.colors)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SessionState:
+    """Per-camera session state — a pytree whose every leaf is an array
+    with a leading camera lane, so C cameras are one device dispatch
+    and one checkpointable object.
+
+    Camera lanes (row c belongs to camera c):
+      * ``bg (C, N)`` / ``gain (C,)`` — the fused ingest kernel's
+        carried background state; ``bg_valid ()`` says whether the lanes
+        hold real history yet (frame 0 seeds them otherwise).
+      * ``cdf_buf (C, W)`` ring buffers of recent utilities with
+        ``cdf_len`` / ``cdf_pos`` — the sliding-window utility CDF
+        (Eq. 16) per camera.
+      * ``threshold (C,)`` — current admission thresholds (Eq. 17).
+      * ``proc_q (C,)`` (+ ``proc_seen``) — asymmetric-EWMA backend
+        latency estimates; ``fps_obs (C,)`` (+ ``fps_seen``) — observed
+        per-camera ingress rates (Eq. 18–19 inputs).
+      * ``queue_cap (C,)`` — dynamic queue sizes (Eq. 20).
+    """
+    bg: np.ndarray          # (C, N) float32
+    gain: np.ndarray        # (C,) float32
+    bg_valid: np.ndarray    # () bool
+    cdf_buf: np.ndarray     # (C, W) float32
+    cdf_len: np.ndarray     # (C,) int32
+    cdf_pos: np.ndarray     # (C,) int32
+    threshold: np.ndarray   # (C,) float32
+    proc_q: np.ndarray      # (C,) float32
+    proc_seen: np.ndarray   # (C,) bool
+    fps_obs: np.ndarray     # (C,) float32
+    fps_seen: np.ndarray    # (C,) bool
+    queue_cap: np.ndarray   # (C,) int32
+
+    @property
+    def num_cameras(self) -> int:
+        return self.gain.shape[0]
+
+    def as_dict(self) -> Dict[str, np.ndarray]:
+        return {f.name: np.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def fresh(cls, num_cameras: int, npix: int = 0, *,
+              cdf_window: int = 4096, fps: float = 10.0,
+              queue_size: int = 8) -> "SessionState":
+        C = int(num_cameras)
+        return cls(
+            bg=np.zeros((C, npix), np.float32),
+            gain=np.ones((C,), np.float32),
+            bg_valid=np.asarray(False),
+            cdf_buf=np.zeros((C, cdf_window), np.float32),
+            cdf_len=np.zeros((C,), np.int32),
+            cdf_pos=np.zeros((C,), np.int32),
+            threshold=np.full((C,), -np.inf, np.float32),
+            proc_q=np.zeros((C,), np.float32),
+            proc_seen=np.zeros((C,), bool),
+            fps_obs=np.full((C,), float(fps), np.float32),
+            fps_seen=np.zeros((C,), bool),
+            queue_cap=np.full((C,), int(queue_size), np.int32),
+        )
+
+
+@dataclass(frozen=True)
+class IngestResult:
+    """One fused-dispatch result over a camera array."""
+    pf: np.ndarray                 # (C, T, nc, bs, bv)
+    hue_fraction: np.ndarray       # (C, T, nc)
+    utility: Optional[np.ndarray]  # (C, T) — None without a trained model
+
+
+class ShedSession:
+    """A camera array's Load Shedder: fused scoring + per-camera
+    admission/queues + shared-backend control loop.
+
+    Use :func:`open_session` to construct one.
+    """
+
+    def __init__(self, query: Query, num_cameras: int = 1, *,
+                 frame_shape: Optional[Tuple[int, int]] = None,
+                 model: Optional[UtilityModel] = None,
+                 train_utilities: Optional[Sequence[float]] = None,
+                 queue_size: int = 8,
+                 latency_inputs: Optional[LatencyInputs] = None,
+                 cdf_window: int = 4096,
+                 ewma_alpha: float = 0.2, ewma_alpha_up: float = 0.6,
+                 min_proc: float = 1e-6,
+                 update_cdf_online: bool = True,
+                 impl: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> None:
+        if num_cameras < 1:
+            raise ValueError("num_cameras must be >= 1")
+        self.query = query
+        self.num_cameras = int(num_cameras)
+        self.model = model
+        self.latency_inputs = latency_inputs or LatencyInputs()
+        self.ewma_alpha = float(ewma_alpha)
+        self.ewma_alpha_up = float(ewma_alpha_up)
+        self.min_proc = float(min_proc)
+        self.update_cdf_online = bool(update_cdf_online)
+        self.impl = impl
+        self.interpret = interpret
+        self._queue_size = int(queue_size)
+        npix = frame_shape[0] * frame_shape[1] if frame_shape else 0
+        self.state = SessionState.fresh(
+            num_cameras, npix, cdf_window=cdf_window, fps=query.fps,
+            queue_size=queue_size)
+        self.queues: List[UtilityQueue] = [
+            UtilityQueue(queue_size) for _ in range(self.num_cameras)]
+        self.stats = ShedderStats()
+        self.per_camera_offered = np.zeros((self.num_cameras,), np.int64)
+        self.per_camera_dropped = np.zeros((self.num_cameras,), np.int64)
+        self._lane_of: Dict[Any, int] = {}
+        if train_utilities is not None:
+            self.seed_cdf(train_utilities)
+
+    # -- camera lanes --------------------------------------------------------
+
+    def lane(self, cam_id: Any) -> int:
+        """Map an external camera id to a state lane (first-seen order)."""
+        lane = self._lane_of.get(cam_id)
+        if lane is None:
+            if len(self._lane_of) >= self.num_cameras:
+                raise ValueError(
+                    f"camera id {cam_id!r} exceeds the session's "
+                    f"{self.num_cameras} lanes")
+            lane = self._lane_of[cam_id] = len(self._lane_of)
+        return lane
+
+    # -- training / scoring --------------------------------------------------
+
+    def fit(self, pfs: np.ndarray, labels: np.ndarray) -> UtilityModel:
+        """Train the query's utility function (Eq. 12–13) on PF matrices
+        and seed every camera's utility CDF with the train utilities."""
+        self.model = train_utility_model(
+            np.asarray(pfs, np.float32), labels, self.query.colors,
+            op=self.query.op)
+        self.seed_cdf(batch_utilities(self.model, np.asarray(pfs, np.float32)))
+        return self.model
+
+    def seed_cdf(self, utilities: Union[np.ndarray, Sequence[float]]) -> None:
+        """Fill every camera's CDF window with a shared utility history."""
+        us = np.asarray(utilities, np.float32).reshape(-1)
+        self._cdf_push(np.broadcast_to(us, (self.num_cameras, us.size)))
+
+    # -- fused ingest --------------------------------------------------------
+
+    def ingest(self, frames: np.ndarray, *, impl: Optional[str] = None,
+               interpret: Optional[bool] = None) -> IngestResult:
+        """Score one frame batch for the whole camera array in ONE fused
+        device dispatch, carrying per-camera background state.
+
+        frames: (C, T, H, W, 3) float32 RGB in [0, 255] — or
+        (T, H, W, 3) for single-camera sessions.
+        """
+        frames = np.asarray(frames, np.float32)
+        if frames.ndim == 4:
+            frames = frames[None]
+        if frames.ndim != 5 or frames.shape[0] != self.num_cameras:
+            raise ValueError(
+                f"expected ({self.num_cameras}, T, H, W, 3) frames, "
+                f"got {frames.shape}")
+        n = frames.shape[2] * frames.shape[3]
+        st = self.state
+        if st.bg.shape[1] != n:
+            if bool(st.bg_valid):
+                raise ValueError(
+                    f"frame size {n} px does not match carried background "
+                    f"state {st.bg.shape}")
+            st.bg = np.zeros((self.num_cameras, n), np.float32)
+        state_in = (IngestState(bg=st.bg, gain=st.gain)
+                    if bool(st.bg_valid) else None)
+        q = self.query
+        pf, hf, util, state_out = ingest_pipeline(
+            frames, q.colors, self.model, state=state_in, alpha=q.alpha,
+            threshold=q.threshold, use_foreground=q.use_foreground,
+            op=q.op, bs=q.bs, bv=q.bv,
+            impl=impl if impl is not None else self.impl,
+            interpret=interpret if interpret is not None else self.interpret)
+        st.bg = np.asarray(state_out.bg, np.float32)
+        st.gain = np.asarray(state_out.gain, np.float32).reshape(-1)
+        st.bg_valid = np.asarray(True)
+        return IngestResult(
+            pf=np.asarray(pf), hue_fraction=np.asarray(hf),
+            utility=None if util is None else np.asarray(util))
+
+    @property
+    def ingest_state(self) -> IngestState:
+        """The kernel-facing ``(bg, gain)`` lanes (for host handoff)."""
+        return IngestState(bg=self.state.bg, gain=self.state.gain)
+
+    def set_ingest_state(self, state: Optional[IngestState]) -> None:
+        if state is None:
+            self.state.bg_valid = np.asarray(False)
+            return
+        bg = np.asarray(state.bg, np.float32)
+        if bg.ndim == 1:
+            bg = bg[None]
+        if bg.shape[0] != self.num_cameras:
+            raise ValueError(
+                f"state has {bg.shape[0]} camera lanes, session has "
+                f"{self.num_cameras}")
+        self.state.bg = bg
+        self.state.gain = np.asarray(
+            state.gain, np.float32).reshape(-1)
+        self.state.bg_valid = np.asarray(True)
+
+    # -- utility CDF (Eq. 16–17), vectorized over cameras --------------------
+
+    def _cdf_push(self, us: np.ndarray) -> None:
+        """Append utilities (C, k) into the per-camera ring buffers."""
+        st = self.state
+        C, W = st.cdf_buf.shape
+        us = np.asarray(us, np.float32)
+        if us.shape[1] >= W:                       # keep only the last W
+            us = us[:, -W:]
+        k = us.shape[1]
+        if k == 0:
+            return
+        idx = (st.cdf_pos[:, None] + np.arange(k)[None]) % W
+        st.cdf_buf[np.arange(C)[:, None], idx] = us
+        st.cdf_pos = ((st.cdf_pos + k) % W).astype(np.int32)
+        st.cdf_len = np.minimum(st.cdf_len + k, W).astype(np.int32)
+
+    def _thresholds_for(self, rates: np.ndarray) -> np.ndarray:
+        """Per-camera Eq. 17 via the shared ``threshold_from_sorted``
+        formula (float32 lanes: the threshold is the next float32 above
+        the r-quantile value, dropping everything <= it)."""
+        st = self.state
+        th = np.full((self.num_cameras,), -np.inf, np.float32)
+        for c in range(self.num_cameras):
+            n = int(st.cdf_len[c])
+            th[c] = threshold_from_sorted(np.sort(st.cdf_buf[c, :n]),
+                                          float(rates[c]))
+        return th
+
+    def observed_drop_rate(self, cam: int = 0) -> float:
+        """Fraction of camera ``cam``'s history below its threshold."""
+        st = self.state
+        n = int(st.cdf_len[cam])
+        if n == 0:
+            return 0.0
+        return float((st.cdf_buf[cam, :n] < st.threshold[cam]).mean())
+
+    # -- admission + queues --------------------------------------------------
+
+    def admit(self, utilities: np.ndarray,
+              items: Optional[Sequence[Sequence[Any]]] = None) -> np.ndarray:
+        """Vectorized admission + queue decisions for a scored batch.
+
+        utilities: (C, T) per-camera frame utilities (a (T,) vector is
+        accepted for single-camera sessions). ``items[c][t]`` are the
+        frame payloads queued for transmission; when omitted, the
+        ``(cam, idx)`` index pair is queued instead.
+
+        Returns an (C, T) int8 array of decision codes (``ADMIT``,
+        ``SHED_ADMISSION``, ``SHED_QUEUE``); admitted frames have been
+        pushed into their camera's utility-ordered queue. A queue
+        eviction marks the *evicted* frame: an earlier frame of this
+        batch flips to ``SHED_QUEUE`` retroactively, so the returned
+        codes describe what actually survived the batch.
+        """
+        u = np.asarray(utilities, np.float64)
+        if u.ndim == 1:
+            u = u[None]
+        if u.shape[0] != self.num_cameras:
+            raise ValueError(
+                f"expected ({self.num_cameras}, T) utilities, got {u.shape}")
+        C, T = u.shape
+        if self.update_cdf_online:
+            self._cdf_push(u)
+        decisions = np.where(u < self.state.threshold[:, None],
+                             SHED_ADMISSION, ADMIT).astype(np.int8)
+        self.stats.offered += C * T
+        self.stats.dropped_admission += int((decisions == SHED_ADMISSION).sum())
+        self.per_camera_offered += T
+        for c in range(C):
+            pushed: Dict[int, int] = {}          # id(item) -> batch index
+            for i in np.flatnonzero(decisions[c] == ADMIT):
+                item = items[c][i] if items is not None else (c, int(i))
+                evicted = self.queues[c].push(item, float(u[c, i]))
+                pushed[id(item)] = int(i)
+                if evicted is not None:
+                    self.stats.dropped_queue += 1
+                    if id(evicted) in pushed:    # same-batch frame out
+                        decisions[c, pushed[id(evicted)]] = SHED_QUEUE
+                    else:                        # older resident evicted
+                        self.per_camera_dropped[c] += 1
+        self.per_camera_dropped += (decisions != ADMIT).sum(axis=1)
+        return decisions
+
+    def offer(self, item: Any, utility: float,
+              cam: Optional[int] = None) -> str:
+        """Frame-at-a-time admission (the simulator/serving surface).
+
+        Returns 'queued' | 'shed_admission' | 'shed_queue'. The camera
+        lane comes from ``cam``, else from ``item.cam_id`` (external ids
+        are mapped to lanes in first-seen order), else lane 0.
+        """
+        c = self.lane(getattr(item, "cam_id", 0)) if cam is None else int(cam)
+        u = float(utility)
+        self.stats.offered += 1
+        self.per_camera_offered[c] += 1
+        if self.update_cdf_online:
+            self._cdf_push_one(c, u)
+        if u < self.state.threshold[c]:
+            self.stats.dropped_admission += 1
+            self.per_camera_dropped[c] += 1
+            return "shed_admission"
+        evicted = self.queues[c].push(item, u)
+        if evicted is not None:
+            self.stats.dropped_queue += 1
+            self.per_camera_dropped[c] += 1
+            if evicted is item:
+                return "shed_queue"
+        return "queued"
+
+    def _cdf_push_one(self, c: int, u: float) -> None:
+        st = self.state
+        W = st.cdf_buf.shape[1]
+        st.cdf_buf[c, st.cdf_pos[c]] = u
+        st.cdf_pos[c] = (st.cdf_pos[c] + 1) % W
+        st.cdf_len[c] = min(st.cdf_len[c] + 1, W)
+
+    def next_frame(self, cam: Optional[int] = None) -> Optional[Any]:
+        """Transmission control: send the best queued frame — of one
+        camera, or (default) the best across the whole array."""
+        if cam is not None:
+            item = self.queues[cam].pop_best()
+        else:
+            best_c, best_u = -1, -np.inf
+            for c, q in enumerate(self.queues):
+                u = q.peek_best_utility()
+                if u is not None and u > best_u:
+                    best_c, best_u = c, u
+            item = self.queues[best_c].pop_best() if best_c >= 0 else None
+        if item is not None:
+            self.stats.sent += 1
+        return item
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    # -- control loop (Eq. 18–20), vectorized over cameras -------------------
+
+    @property
+    def latency_bound(self) -> float:
+        return self.query.latency_bound
+
+    def expected_proc(self) -> float:
+        """Current backend per-frame latency estimate (shared backend:
+        every lane carries the same value)."""
+        return float(self.state.proc_q.max(initial=0.0))
+
+    def report_backend_latency(self, proc_latency: float) -> None:
+        """Shared-backend metric feed: asymmetric EWMA on every lane
+        (overload must be detected fast, recovery can be smoothed)."""
+        st = self.state
+        x = max(float(proc_latency), self.min_proc)
+        a = np.where(x > st.proc_q, self.ewma_alpha_up, self.ewma_alpha)
+        st.proc_q = np.where(st.proc_seen, st.proc_q + a * (x - st.proc_q),
+                             x).astype(np.float32)
+        st.proc_seen = np.ones_like(st.proc_seen)
+
+    def report_ingress_fps(self, fps: float, cam: Optional[int] = None) -> None:
+        """Observed ingress rate: per camera, or an aggregate rate split
+        evenly across the array's lanes."""
+        st = self.state
+        if cam is None:
+            x = np.full((self.num_cameras,), float(fps) / self.num_cameras)
+        else:
+            x = st.fps_obs.copy()
+            x[cam] = float(fps)
+        upd = np.ones((self.num_cameras,), bool) if cam is None else \
+            np.arange(self.num_cameras) == cam
+        ew = st.fps_obs + self.ewma_alpha * (x - st.fps_obs)
+        st.fps_obs = np.where(upd, np.where(st.fps_seen, ew, x),
+                              st.fps_obs).astype(np.float32)
+        st.fps_seen = st.fps_seen | upd
+
+    def tick(self) -> Dict[str, Any]:
+        """Re-derive per-camera thresholds (Eq. 17–19) and queue sizes
+        (Eq. 20) from the current metric lanes. Vectorized over C."""
+        st = self.state
+        li = self.latency_inputs
+        p = np.maximum(st.proc_q, self.min_proc)            # (C,)
+        supported = 1.0 / p                                 # shared backend
+        share = supported / self.num_cameras                # per-camera slice
+        rates = np.clip(1.0 - share / np.maximum(st.fps_obs, 1e-9), 0.0, 1.0)
+        st.threshold = self._thresholds_for(rates)
+        budget = (self.query.latency_bound - li.net_cam_ls - li.net_ls_q
+                  - li.proc_cam)
+        cap = np.maximum((budget / p + 1e-9).astype(np.int64) - 1, 1)
+        st.queue_cap = cap.astype(np.int32)
+        for c, q in enumerate(self.queues):
+            dropped = q.resize(int(cap[c]))
+            self.stats.dropped_queue += len(dropped)
+            self.per_camera_dropped[c] += len(dropped)
+        finite = np.isfinite(st.threshold)
+        return {
+            "target_drop_rate": float(rates.mean()),
+            "threshold": float(st.threshold[finite].mean()) if finite.any()
+            else -np.inf,
+            "queue_size": int(st.queue_cap.max()),
+            "per_camera": {
+                "target_drop_rate": rates.tolist(),
+                "threshold": st.threshold.tolist(),
+                "queue_size": st.queue_cap.tolist(),
+            },
+        }
+
+    # -- checkpoint / restore (serve-path state) -----------------------------
+
+    def _model_arrays(self) -> Dict[str, np.ndarray]:
+        """The trained utility model as fixed-shape arrays (zeros when
+        untrained) so one checkpoint template covers both cases."""
+        q = self.query
+        nc = q.num_colors
+        if self.model is not None:
+            return {"model_M_pos": np.asarray(self.model.M_pos, np.float32),
+                    "model_M_neg": np.asarray(self.model.M_neg, np.float32),
+                    "model_norm": np.asarray(self.model.norm, np.float32)}
+        return {"model_M_pos": np.zeros((nc, q.bs, q.bv), np.float32),
+                "model_M_neg": np.zeros((nc, q.bs, q.bv), np.float32),
+                "model_norm": np.zeros((nc,), np.float32)}
+
+    def checkpoint(self, path, step: int = 0, *, async_: bool = False):
+        """Persist the SessionState pytree (plus the trained utility
+        model) via ``repro.train.checkpoint`` (atomic, async-capable).
+        Queue contents are live frame payloads and are not persisted."""
+        from repro.train import checkpoint as ckpt
+        meta = {
+            "kind": "shed_session",
+            "num_cameras": self.num_cameras,
+            "colors": [c.name for c in self.query.colors],
+            "op": self.query.op,
+            "npix": int(self.state.bg.shape[1]),
+            "has_model": self.model is not None,
+            "model_op": self.model.op if self.model is not None else "",
+        }
+        tree = {**self.state.as_dict(), **self._model_arrays()}
+        return ckpt.save(path, step, tree, metadata=meta, async_=async_)
+
+    def restore(self, path,
+                step: Optional[int] = None) -> Tuple[int, Dict[str, Any]]:
+        """Load a SessionState checkpoint into this session. The session
+        must have matching lane shapes (same ``num_cameras``; pass
+        ``frame_shape`` to ``open_session`` so the background lanes are
+        allocated before restoring)."""
+        from repro.train import checkpoint as ckpt
+        tree = {**self.state.as_dict(), **self._model_arrays()}
+        template = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                    for k, v in tree.items()}
+        out, step, meta = ckpt.restore(path, template, step=step)
+        for k in self.state.as_dict():
+            setattr(self.state, k, np.asarray(out[k]))
+        if meta.get("has_model"):
+            self.model = UtilityModel(
+                self.query.colors, np.asarray(out["model_M_pos"]),
+                np.asarray(out["model_M_neg"]),
+                np.asarray(out["model_norm"]),
+                meta.get("model_op") or self.query.op)
+        return step, meta
+
+
+def open_session(query: Query, num_cameras: int = 1, **kw: Any) -> ShedSession:
+    """Open a ShedSession for ``num_cameras`` cameras running ``query``.
+
+    Keyword options: ``frame_shape=(H, W)`` (pre-allocates background
+    lanes, required before ``restore``), ``model`` (a trained
+    UtilityModel; or call ``session.fit``), ``train_utilities`` (seeds
+    the admission CDFs), ``queue_size``, ``latency_inputs``,
+    ``cdf_window``, ``impl``/``interpret`` (ingest dispatch overrides).
+    """
+    return ShedSession(query, num_cameras, **kw)
+
+
+__all__ = [
+    "ADMIT", "SHED_ADMISSION", "SHED_QUEUE",
+    "IngestResult", "Query", "SessionState", "ShedSession", "open_session",
+]

@@ -36,6 +36,11 @@ class ShedderStats:
 
 
 class LoadShedder:
+    """Single-camera shedder. Multi-camera arrays (and new code in
+    general) use ``repro.core.session.ShedSession``, which shares this
+    class's serving surface (``offer``/``next_frame``/``tick`` plus the
+    metric feeds below) so the pipeline simulator drives either."""
+
     def __init__(self, model: Optional[UtilityModel], cdf: UtilityCDF,
                  control: ControlLoop, queue_size: int = 8,
                  update_cdf_online: bool = True):
@@ -46,6 +51,21 @@ class LoadShedder:
         self.threshold = -float("inf")
         self.stats = ShedderStats()
         self.update_cdf_online = update_cdf_online
+
+    # -- metric feeds (shared surface with ShedSession) ----------------------
+    @property
+    def latency_bound(self) -> float:
+        return self.control.latency_bound
+
+    def expected_proc(self) -> float:
+        """Current backend per-frame latency estimate."""
+        return self.control.proc_q.value
+
+    def report_backend_latency(self, proc_latency: float):
+        self.control.report_backend_latency(proc_latency)
+
+    def report_ingress_fps(self, fps: float):
+        self.control.report_ingress_fps(fps)
 
     # -- scoring ------------------------------------------------------------
     def utility_of(self, pf) -> float:

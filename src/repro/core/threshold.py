@@ -13,6 +13,23 @@ from typing import Iterable, Optional
 import numpy as np
 
 
+def threshold_from_sorted(v: np.ndarray, r: float) -> float:
+    """Eq. 17 on a sorted utility array: min u_th with CDF(u_th) >= r.
+
+    The single definition of the quantile-index + nextafter formula —
+    ``UtilityCDF`` (scalar, float64) and the session's per-camera lanes
+    (float32 rows) both call it, so they cannot drift apart. The
+    threshold is the next representable value *in the array's dtype*
+    above the r-quantile, dropping everything <= it; r <= 0 maps to
+    -inf (shed nothing).
+    """
+    if len(v) == 0 or r <= 0.0:
+        return float(-np.inf)
+    idx = int(np.ceil(min(r, 1.0) * len(v))) - 1
+    idx = max(0, min(idx, len(v) - 1))
+    return float(np.nextafter(v[idx], np.asarray(np.inf, v.dtype)))
+
+
 class UtilityCDF:
     def __init__(self, history: Optional[Iterable[float]] = None,
                  window: int = 4096):
@@ -49,15 +66,7 @@ class UtilityCDF:
         The shedder drops frames with utility < u_th, so r=0 maps to
         -inf (shed nothing).
         """
-        v = self._view()
-        if len(v) == 0 or r <= 0.0:
-            return -np.inf
-        r = min(r, 1.0)
-        idx = int(np.ceil(r * len(v))) - 1
-        idx = max(0, min(idx, len(v) - 1))
-        # drop everything strictly below the next representable utility
-        u = v[idx]
-        return float(np.nextafter(u, np.inf))
+        return threshold_from_sorted(self._view(), r)
 
     def observed_drop_rate(self, u_th: float) -> float:
         """Fraction of history that would be dropped at threshold u_th."""

@@ -1,10 +1,13 @@
 """Host-side data pipelines.
 
-Video path (paper Fig. 8): camera-side RGB->HSV + background subtraction
-+ PF feature extraction + utility scoring, fused into ONE device
-dispatch per frame batch (``repro.kernels.hsv_features.ops
-.ingest_pipeline`` — the Pallas kernel on TPU, its jitted jnp oracle
-elsewhere), with background state carried across batches. Multi-camera
+Video path (paper Fig. 8): thin wrappers over the unified session API
+(``repro.core.session``). ``ingest_stream`` / ``scenario_records``
+chunk one camera's RGB stream through a single-camera ``ShedSession``;
+``camera_array_records`` stacks C same-shape camera streams into a
+``(C, T, H, W, 3)`` array and scores the whole array with ONE fused
+device dispatch per batch (per-camera background-state lanes carried
+across batches). The fused dispatch is ``ops.ingest_pipeline`` — the
+Pallas kernel on TPU, its jitted jnp oracle elsewhere. Multi-camera
 interleaving merges per-camera record streams for the Load Shedder.
 
 LM path: a seeded synthetic token stream (Zipfian bigram chain — learnable
@@ -24,9 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.colors import Color
+from repro.core.session import Query, ShedSession
 from repro.core.utility import UtilityModel, pixel_fraction_matrix
 from repro.data.synthetic import VideoScenario, combined_label, combined_objects
-from repro.kernels.hsv_features.ops import IngestState, ingest_pipeline
+from repro.kernels.hsv_features.ops import IngestState
 
 
 # ---------------------------------------------------------------------------
@@ -72,13 +76,28 @@ def features_from_hsv(frames_hsv: np.ndarray, colors: Sequence[Color],
     return np.concatenate(outs, axis=0)
 
 
+def _ingest_session(colors: Sequence[Color], num_cameras: int,
+                    model: Optional[UtilityModel],
+                    use_foreground: bool, op: Optional[str],
+                    impl: Optional[str],
+                    interpret: Optional[bool]) -> ShedSession:
+    """A scoring-only session for the camera-side ingest wrappers."""
+    op = op or (model.op if model is not None else "or")
+    if op == "single":
+        op = "or" if len(colors) > 1 else "single"
+    query = Query(colors=tuple(colors), op=op, use_foreground=use_foreground)
+    return ShedSession(query, num_cameras, model=model, impl=impl,
+                       interpret=interpret, cdf_window=1)
+
+
 def ingest_stream(frames_rgb: np.ndarray, colors: Sequence[Color],
                   model: Optional[UtilityModel] = None, *,
                   state: Optional[IngestState] = None, batch: int = 64,
                   use_foreground: bool = True, op: Optional[str] = None,
                   impl: Optional[str] = None,
                   interpret: Optional[bool] = None):
-    """Fused camera-side ingest over a (T, H, W, 3) RGB stream.
+    """Fused camera-side ingest over a (T, H, W, 3) RGB stream — a thin
+    wrapper over a single-camera ``ShedSession``.
 
     Chunks the stream into ``batch``-frame batches, each ONE fused device
     dispatch (RGB->HSV + background subtraction + PF features + utility),
@@ -88,19 +107,22 @@ def ingest_stream(frames_rgb: np.ndarray, colors: Sequence[Color],
     Returns (pf (T, nc, 8, 8) np, hf (T, nc) np, util (T,) np | None,
     state') — pass ``state'`` back in to continue the same stream.
     """
+    sess = _ingest_session(colors, 1, model, use_foreground, op, impl,
+                           interpret)
+    if state is not None:
+        sess.set_ingest_state(state)
     T = frames_rgb.shape[0]
     pfs, hfs, us = [], [], []
     for i in range(0, T, batch):
-        pf, hf, u, state = ingest_pipeline(
-            frames_rgb[i:i + batch], colors, model, state=state,
-            use_foreground=use_foreground, op=op, impl=impl,
-            interpret=interpret)
-        pfs.append(np.asarray(pf))
-        hfs.append(np.asarray(hf))
-        if u is not None:
-            us.append(np.asarray(u))
+        res = sess.ingest(frames_rgb[i:i + batch][None])
+        pfs.append(res.pf[0])
+        hfs.append(res.hue_fraction[0])
+        if res.utility is not None:
+            us.append(res.utility[0])
     util = np.concatenate(us) if us else None
-    return np.concatenate(pfs), np.concatenate(hfs), util, state
+    st = sess.ingest_state
+    state_out = IngestState(bg=st.bg[0], gain=st.gain[0])
+    return np.concatenate(pfs), np.concatenate(hfs), util, state_out
 
 
 @dataclass
@@ -115,6 +137,18 @@ class FrameRecord:
     utility: float = float("nan")
 
 
+def _records_for(sc: VideoScenario, cam_id: int, names: Sequence[str],
+                 op: str, fps: float, t0: float, pfs: np.ndarray,
+                 util: Optional[np.ndarray]) -> List[FrameRecord]:
+    labels = combined_label(sc, names, op)
+    objs = combined_objects(sc, names)
+    return [FrameRecord(cam_id, t, t0 + t / fps, pfs[t], bool(labels[t]),
+                        frozenset(objs[t]), bool(sc.busy[t]),
+                        utility=float(util[t]) if util is not None
+                        else float("nan"))
+            for t in range(sc.num_frames)]
+
+
 def scenario_records(sc: VideoScenario, cam_id: int, colors: Sequence[Color],
                      op: str = "or", fps: float = 10.0,
                      use_foreground: bool = True, t0: float = 0.0,
@@ -124,17 +158,46 @@ def scenario_records(sc: VideoScenario, cam_id: int, colors: Sequence[Color],
     camera sees RGB; HSV conversion, background subtraction, PF features
     and — when ``model`` is given — utility scores all happen in one
     device dispatch per ``batch`` frames)."""
-    names = [c.name for c in colors]
     pfs, _hf, util, _state = ingest_stream(
         sc.frames_rgb().astype(np.float32), colors, model,
         batch=batch, use_foreground=use_foreground, op=op)
-    labels = combined_label(sc, names, op)
-    objs = combined_objects(sc, names)
-    return [FrameRecord(cam_id, t, t0 + t / fps, pfs[t], bool(labels[t]),
-                        frozenset(objs[t]), bool(sc.busy[t]),
-                        utility=float(util[t]) if util is not None
-                        else float("nan"))
-            for t in range(sc.num_frames)]
+    return _records_for(sc, cam_id, [c.name for c in colors], op, fps, t0,
+                        pfs, util)
+
+
+def camera_array_records(scenarios: Sequence[VideoScenario],
+                         colors: Sequence[Color], op: str = "or",
+                         fps: float = 10.0, use_foreground: bool = True,
+                         t0: float = 0.0,
+                         model: Optional[UtilityModel] = None,
+                         cam_ids: Optional[Sequence[int]] = None,
+                         batch: int = 64,
+                         impl: Optional[str] = None,
+                         interpret: Optional[bool] = None
+                         ) -> List[List[FrameRecord]]:
+    """C same-shape camera streams -> per-camera FrameRecord lists via
+    ONE C-camera ``ShedSession``: each ``batch``-frame chunk of the whole
+    array is a single fused device dispatch with per-camera
+    ``(bg, gain)`` state lanes carried across chunks."""
+    frames = np.stack([sc.frames_rgb().astype(np.float32)
+                       for sc in scenarios])            # (C, T, H, W, 3)
+    sess = _ingest_session(colors, len(scenarios), model, use_foreground,
+                           op, impl, interpret)
+    T = frames.shape[1]
+    pfs, us = [], []
+    for i in range(0, T, batch):
+        res = sess.ingest(frames[:, i:i + batch])
+        pfs.append(res.pf)
+        if res.utility is not None:
+            us.append(res.utility)
+    pfs = np.concatenate(pfs, axis=1)                   # (C, T, nc, bs, bv)
+    util = np.concatenate(us, axis=1) if us else None
+    names = [c.name for c in colors]
+    cam_ids = list(cam_ids) if cam_ids is not None else list(
+        range(len(scenarios)))
+    return [_records_for(sc, cam_ids[c], names, op, fps, t0, pfs[c],
+                         util[c] if util is not None else None)
+            for c, sc in enumerate(scenarios)]
 
 
 def interleave_streams(per_cam_records: Sequence[List[FrameRecord]]

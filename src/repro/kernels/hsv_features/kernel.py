@@ -9,18 +9,20 @@ Two entry points:
 
 ``ingest_batch``
     The batched end-to-end ingest pipeline (this repo's hot path). One
-    ``pallas_call`` takes a ``(T, N, 3)`` batch of RGB frames and runs,
-    per pixel tile,
+    ``pallas_call`` takes a ``(T, N, 3)`` frame batch — or a whole
+    camera array ``(C, T, N, 3)`` with per-camera ``(bg, gain)`` state
+    lanes — and runs, per pixel tile,
 
       HBM -> VMEM tile -> RGB->HSV -> EMA background subtraction
           -> joint (sat, val) bin one-hot (computed ONCE per tile)
           -> per-color hue masks applied via one matmul
           -> per-frame PF counts + totals + in-kernel utility score
 
-    over a 2D grid ``(frame, pixel-tile)``. TPU grid execution is
-    sequential per core and all accumulators / state buffers use
-    constant index maps (fully VMEM-resident for the whole kernel), so
-    read-modify-write across grid steps is race-free.
+    over a 3D grid ``(camera, frame, pixel-tile)``. TPU grid execution
+    is sequential per core; accumulator / state blocks are indexed by
+    the camera dimension only, so within one camera's grid span they
+    stay VMEM-resident and read-modify-write across grid steps is
+    race-free, while each camera gets its own state lane.
 
     Background-model state is *explicit kernel state carried across
     batches*: the caller passes ``(bg, gain)`` in and receives the
@@ -42,8 +44,9 @@ Hue ranges, bin counts, EMA constants and the composition op are all
 *static* (baked into the kernel at trace time), matching the deployment
 model: one compiled shedder per query.
 
-VMEM contract: the resident state is ``T*nc*bins + N`` floats (counts
-plus background); with the default 64-frame batches and edge-scale
+VMEM contract: the resident state is ``T*nc*bins + N`` floats per
+camera (counts plus background — only the current camera's lane is
+resident at a time); with the default 64-frame batches and edge-scale
 frames this is a few hundred KiB, far below the ~16 MiB VMEM budget.
 """
 from __future__ import annotations
@@ -172,8 +175,10 @@ def _ingest_kernel(rgb_ref, bg0_ref, gain0_ref, m_ref, norm_ref,
                    bg_ref, gain_ref, sums_ref,
                    *, hue_ranges, bs, bv, alpha, threshold, npix,
                    use_fg, bg_valid, op, num_frames, num_tiles):
-    t = pl.program_id(0)        # frame (outer — background is sequential)
-    j = pl.program_id(1)        # pixel tile (inner)
+    # grid (camera, frame, tile): all state/accumulator blocks are
+    # indexed by camera only, so each camera's span reuses its own lane
+    t = pl.program_id(1)        # frame (background recurrence is sequential)
+    j = pl.program_id(2)        # pixel tile (inner)
     nc = len(hue_ranges)
 
     @pl.when((t == 0) & (j == 0))
@@ -181,7 +186,7 @@ def _ingest_kernel(rgb_ref, bg0_ref, gain0_ref, m_ref, norm_ref,
         gain_ref[0, 0] = gain0_ref[0, 0]
         sums_ref[...] = jnp.zeros_like(sums_ref)
 
-    rgb = rgb_ref[0]                                    # (BLOCK, 3)
+    rgb = rgb_ref[0, 0]                                 # (BLOCK, 3)
     h, s, v = _rgb_to_hsv_block(rgb[:, 0], rgb[:, 1], rgb[:, 2])
     validf = (j * BLOCK
               + jax.lax.broadcasted_iota(jnp.int32, (BLOCK, 1), 0)[:, 0]
@@ -224,28 +229,28 @@ def _ingest_kernel(rgb_ref, bg0_ref, gain0_ref, m_ref, norm_ref,
 
     @pl.when(j == 0)
     def _first_tile():
-        counts_ref[ts, :, :] = counts_t[None]
-        totals_ref[ts, :] = totals_t[None]
-        fgtot_ref[ts, :] = fgtot_t[None, None]
+        counts_ref[0, ts, :, :] = counts_t[None]
+        totals_ref[0, ts, :] = totals_t[None]
+        fgtot_ref[0, ts] = fgtot_t[None]
 
     @pl.when(j > 0)
     def _accumulate():
-        counts_ref[ts, :, :] += counts_t[None]
-        totals_ref[ts, :] += totals_t[None]
-        fgtot_ref[ts, :] += fgtot_t[None, None]
+        counts_ref[0, ts, :, :] += counts_t[None]
+        totals_ref[0, ts, :] += totals_t[None]
+        fgtot_ref[0, ts] += fgtot_t[None]
 
-    # --- in-kernel utility (Eq. 14-15) once all counts are final
+    # --- in-kernel utility (Eq. 14-15) once this camera's counts are final
     @pl.when((t == num_frames - 1) & (j == num_tiles - 1))
     def _finalize_utility():
-        counts = counts_ref[...]                        # (T, nc, bins)
-        totals = totals_ref[...]                        # (T, nc)
+        counts = counts_ref[0]                          # (T, nc, bins)
+        totals = totals_ref[0]                          # (T, nc)
         pf = counts / jnp.maximum(totals, 1.0)[..., None]
         u = jnp.sum(pf * m_ref[...][None], axis=-1)     # (T, nc)
         u = u / jnp.maximum(norm_ref[0, :], 1e-9)[None]
         if op == "and":
-            util_ref[...] = jnp.min(u, axis=-1, keepdims=True)
+            util_ref[...] = jnp.min(u, axis=-1)[None]
         else:                                           # single / or
-            util_ref[...] = jnp.max(u, axis=-1, keepdims=True)
+            util_ref[...] = jnp.max(u, axis=-1)[None]
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -256,24 +261,34 @@ def ingest_batch(rgb, bg0, gain0, M_pos, norm, hue_ranges,
                  threshold: float = 18.0, use_fg: bool = True,
                  bg_valid: bool = True, op: str = "or",
                  interpret: bool | None = None):
-    """Fused batched ingest: one pallas_call for T frames.
+    """Fused batched ingest: one pallas_call for a whole camera array.
 
-    rgb:   (T, N, 3) float32 RGB in [0, 255] (frames flattened to pixels)
-    bg0:   (N,) float32 — background Value-channel state (ignored when
-           ``bg_valid=False``: frame 0 then seeds it and yields no fg)
-    gain0: () float32 — illumination gain state (1.0 when fresh)
+    rgb:   (T, N, 3) float32 RGB in [0, 255] (frames flattened to
+           pixels), or (C, T, N, 3) for a C-camera array
+    bg0:   (N,) / (C, N) float32 — per-camera background Value-channel
+           state (ignored when ``bg_valid=False``: frame 0 then seeds it
+           and yields no fg)
+    gain0: () / (C,) float32 — illumination gain state (1.0 when fresh)
     M_pos: (nc, bs*bv) trained utility matrices (zeros -> utilities are 0)
     norm:  (nc,) per-color normalizers
 
     Returns (counts (T, nc, bs*bv), totals (T, nc), fg_total (T,),
-             utility (T,), bg (N,), gain ()).
+             utility (T,), bg (N,), gain ()) — each with a leading
+    camera lane iff the input had one.
     """
     interpret = _resolve_interpret(interpret)
-    T, n = rgb.shape[0], rgb.shape[1]
+    has_cams = rgb.ndim == 4
+    if not has_cams:
+        rgb = rgb[None]
+    C, T, n = rgb.shape[0], rgb.shape[1], rgb.shape[2]
+    bg0 = jnp.asarray(bg0, jnp.float32).reshape(C, n)
+    # a scalar gain broadcasts to every camera lane, same as the oracle
+    gain0 = jnp.broadcast_to(
+        jnp.asarray(gain0, jnp.float32).reshape(-1, 1), (C, 1))
     pad = (-n) % BLOCK
     if pad:
-        rgb = jnp.pad(rgb, ((0, 0), (0, pad), (0, 0)))
-        bg0 = jnp.pad(bg0, ((0, pad),))
+        rgb = jnp.pad(rgb, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        bg0 = jnp.pad(bg0, ((0, 0), (0, pad)))
     npad = n + pad
     num_tiles = npad // BLOCK
     nc = len(hue_ranges)
@@ -284,35 +299,36 @@ def ingest_batch(rgb, bg0, gain0, M_pos, norm, hue_ranges,
             _ingest_kernel, hue_ranges=hue_ranges, bs=bs, bv=bv,
             alpha=alpha, threshold=threshold, npix=n, use_fg=use_fg,
             bg_valid=bg_valid, op=op, num_frames=T, num_tiles=num_tiles),
-        grid=(T, num_tiles),
+        grid=(C, T, num_tiles),
         in_specs=[
-            pl.BlockSpec((1, BLOCK, 3), lambda t, j: (t, j, 0)),
-            pl.BlockSpec((1, npad), lambda t, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda t, j: (0, 0)),
-            pl.BlockSpec((nc, nb), lambda t, j: (0, 0)),
-            pl.BlockSpec((1, nc), lambda t, j: (0, 0)),
+            pl.BlockSpec((1, 1, BLOCK, 3), lambda c, t, j: (c, t, j, 0)),
+            pl.BlockSpec((1, npad), lambda c, t, j: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, t, j: (c, 0)),
+            pl.BlockSpec((nc, nb), lambda c, t, j: (0, 0)),
+            pl.BlockSpec((1, nc), lambda c, t, j: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((T, nc, nb), lambda t, j: (0, 0, 0)),
-            pl.BlockSpec((T, nc), lambda t, j: (0, 0)),
-            pl.BlockSpec((T, 1), lambda t, j: (0, 0)),
-            pl.BlockSpec((T, 1), lambda t, j: (0, 0)),
-            pl.BlockSpec((1, npad), lambda t, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda t, j: (0, 0)),
-            pl.BlockSpec((1, 2), lambda t, j: (0, 0)),
+            pl.BlockSpec((1, T, nc, nb), lambda c, t, j: (c, 0, 0, 0)),
+            pl.BlockSpec((1, T, nc), lambda c, t, j: (c, 0, 0)),
+            pl.BlockSpec((1, T), lambda c, t, j: (c, 0)),
+            pl.BlockSpec((1, T), lambda c, t, j: (c, 0)),
+            pl.BlockSpec((1, npad), lambda c, t, j: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, t, j: (c, 0)),
+            pl.BlockSpec((1, 2), lambda c, t, j: (c, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, nc, nb), jnp.float32),
-            jax.ShapeDtypeStruct((T, nc), jnp.float32),
-            jax.ShapeDtypeStruct((T, 1), jnp.float32),
-            jax.ShapeDtypeStruct((T, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, npad), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+            jax.ShapeDtypeStruct((C, T, nc, nb), jnp.float32),
+            jax.ShapeDtypeStruct((C, T, nc), jnp.float32),
+            jax.ShapeDtypeStruct((C, T), jnp.float32),
+            jax.ShapeDtypeStruct((C, T), jnp.float32),
+            jax.ShapeDtypeStruct((C, npad), jnp.float32),
+            jax.ShapeDtypeStruct((C, 1), jnp.float32),
+            jax.ShapeDtypeStruct((C, 2), jnp.float32),
         ],
         interpret=interpret,
-    )(rgb.astype(jnp.float32), bg0.astype(jnp.float32)[None],
-      jnp.asarray(gain0, jnp.float32).reshape(1, 1),
+    )(rgb.astype(jnp.float32), bg0, gain0,
       M_pos.astype(jnp.float32), norm.astype(jnp.float32)[None])
-    return (counts, totals, fgtot[:, 0], util[:, 0], bg[0, :n],
+    if has_cams:
+        return counts, totals, fgtot, util, bg[:, :n], gain[:, 0]
+    return (counts[0], totals[0], fgtot[0], util[0], bg[0, :n],
             gain[0, 0])

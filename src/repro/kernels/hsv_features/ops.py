@@ -1,10 +1,11 @@
 """Public wrappers around the fused HSV ingest kernels.
 
 ``ingest_pipeline`` is the camera-side hot path: a ``(T, H, W, 3)`` RGB
-frame batch goes device-side *once* and comes back as PF matrices, hue
-fractions and (when a trained model is supplied) utility scores, with
-the background-subtraction state ``IngestState`` carried explicitly
-across calls (chunked streaming scores identically to one long batch).
+frame batch — or a whole camera array ``(C, T, H, W, 3)`` — goes
+device-side *once* and comes back as PF matrices, hue fractions and
+(when a trained model is supplied) utility scores, with the per-camera
+background-subtraction state ``IngestState`` carried explicitly across
+calls (chunked streaming scores identically to one long batch).
 
 Implementation dispatch is backend-aware: the Pallas kernel on TPU, the
 jitted pure-jnp oracle (one XLA computation, same math) elsewhere —
@@ -60,9 +61,18 @@ def batch_pf(rgb, fg, colors: Sequence[Color], bs: int = B_S, bv: int = B_V,
 
 @dataclass(frozen=True)
 class IngestState:
-    """Background-model state carried across ingest batches."""
-    bg: jax.Array          # (N,) Value-channel background
-    gain: jax.Array        # () illumination gain estimate
+    """Background-model state carried across ingest batches.
+
+    Single-camera states are ``bg (N,), gain ()``; a camera array
+    carries one state lane per camera: ``bg (C, N), gain (C,)``.
+    """
+    bg: jax.Array          # (N,) / (C, N) Value-channel background
+    gain: jax.Array        # () / (C,) illumination gain estimate
+
+    @property
+    def num_cameras(self) -> Optional[int]:
+        """Camera-lane count, or None for a single-camera state."""
+        return self.bg.shape[0] if self.bg.ndim == 2 else None
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -89,20 +99,25 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
                     interpret: Optional[bool] = None):
     """Fused ingest for one frame batch — one device dispatch.
 
-    rgb: (T, H, W, 3) float32 RGB in [0, 255].
-    Returns (pf (T, nc, bs, bv), hf (T, nc), util (T,) | None, state').
-    ``util`` is None when no trained ``model`` is supplied.
+    rgb: (T, H, W, 3) float32 RGB in [0, 255], or (C, T, H, W, 3) for a
+    C-camera array (state then carries per-camera ``(bg, gain)`` lanes).
+    Returns (pf (T, nc, bs, bv), hf (T, nc), util (T,) | None, state'),
+    each with a leading camera lane iff the input had one. ``util`` is
+    None when no trained ``model`` is supplied.
     """
     impl = impl or default_impl()
     hue_ranges = tuple(tuple(c.hue_ranges) for c in colors)
     nc = len(hue_ranges)
-    T = rgb.shape[0]
-    n = rgb.shape[1] * rgb.shape[2]
-    rgb_flat = jnp.asarray(rgb, jnp.float32).reshape(T, n, 3)
+    has_cams = rgb.ndim == 5
+    lead = rgb.shape[:2] if has_cams else rgb.shape[:1]
+    n = rgb.shape[-3] * rgb.shape[-2]
+    rgb_flat = jnp.asarray(rgb, jnp.float32).reshape(*lead, n, 3)
+    bg_shape = (lead[0], n) if has_cams else (n,)
 
     bg_valid = state is not None
-    bg0 = state.bg if bg_valid else jnp.zeros((n,), jnp.float32)
-    gain0 = state.gain if bg_valid else jnp.float32(1.0)
+    bg0 = state.bg if bg_valid else jnp.zeros(bg_shape, jnp.float32)
+    gain0 = (state.gain if bg_valid
+             else jnp.ones(bg_shape[:-1], jnp.float32))
 
     if model is not None:
         M_pos = jnp.asarray(model.M_pos, jnp.float32).reshape(nc, bs * bv)
@@ -132,7 +147,7 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
         raise ValueError(f"unknown ingest impl {impl!r}")
 
     pf = pf_from_counts(counts, totals, bs, bv)
-    hf = totals / jnp.maximum(fgtot, 1.0)[:, None]
+    hf = totals / jnp.maximum(fgtot, 1.0)[..., None]
     new_state = IngestState(bg=bg, gain=gain)
     return pf, hf, (util if model is not None else None), new_state
 

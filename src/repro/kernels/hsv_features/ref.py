@@ -13,7 +13,9 @@ Two levels:
     background subtraction with one-frame-lagged mean-gain illumination
     compensation (a ``lax.scan`` over frames — bit-for-bit the state
     recurrence the kernel runs across its frame grid dimension),
-    per-color PF histograms, and the utility score. Also the *compiled
+    per-color PF histograms, and the utility score. A ``(C, T, N, 3)``
+    camera array maps over a camera lane (``vmap`` of the single-camera
+    pipeline with per-camera ``(bg, gain)`` rows). Also the *compiled
     CPU fast path*: jitted as one XLA computation it has exactly one
     device round-trip per frame batch, which is what the edge deployment
     needs when no TPU is present.
@@ -97,35 +99,71 @@ def ema_background_scan(v_frames, bg0, gain0, *, alpha=0.05, threshold=18.0,
     return fg, bg, gain
 
 
+def _masked_hist(joint, weights, nb: int):
+    """Per-(row, color) histograms via row-wise sort + searchsorted.
+
+    joint: (..., N) bin indices; weights: (nc, ..., N) BINARY masks
+    (hue mask x foreground mask — always {0, 1} on the ingest path).
+    Returns counts (..., nc, nb). Masked-out pixels get the sentinel
+    bin ``nb`` and fall off the end after sorting; the per-bin counts
+    are the gaps between searchsorted bin boundaries. Counts are small
+    integers, so this is bit-identical to a scatter-add — and ~3x
+    faster on CPU, where XLA lowers scatter to a serial per-element
+    loop but row sorts vectorize.
+    """
+    nc = weights.shape[0]
+    lead = joint.shape[:-1]
+    n = joint.shape[-1]
+    w = jnp.moveaxis(weights, 0, -2)                     # (..., nc, n)
+    ids = jnp.where(w > 0, joint[..., None, :], nb)      # (..., nc, n)
+    s = jnp.sort(ids.reshape(-1, n), axis=-1)
+    bounds = jax.vmap(lambda row: jnp.searchsorted(
+        row, jnp.arange(nb + 1, dtype=jnp.int32)))(s)
+    return jnp.diff(bounds, axis=-1).astype(
+        jnp.float32).reshape(*lead, nc, nb)
+
+
 def ingest_batch_ref(rgb, bg0, gain0, M_pos, norm, hue_ranges,
                      bs: int = B_S, bv: int = B_V, *, alpha: float = 0.05,
                      threshold: float = 18.0, use_fg: bool = True,
                      bg_valid: bool = True, op: str = "or"):
     """Oracle for ``kernel.ingest_batch`` (same signature/returns).
 
-    rgb: (T, N, 3) float32. Returns (counts (T, nc, bs*bv),
-    totals (T, nc), fg_total (T,), utility (T,), bg (N,), gain ()).
+    rgb: (T, N, 3) float32, or (C, T, N, 3) with bg0 (C, N) and
+    gain0 (C,). Returns (counts (T, nc, bs*bv), totals (T, nc),
+    fg_total (T,), utility (T,), bg (N,), gain ()) — each with a
+    leading camera lane iff the input had one. The camera-array path
+    runs the frame-parallel stages over all C*T frames at once and one
+    background scan with a batched (C, N) carry — per-camera results
+    are bit-identical to C independent single-camera runs.
     """
+    has_cams = rgb.ndim == 4
+    if not has_cams:
+        rgb, bg0 = rgb[None], bg0[None]
+    C = rgb.shape[0]
+    gain0 = jnp.broadcast_to(jnp.asarray(gain0, jnp.float32).reshape(-1),
+                             (C,))
+
     hsv = rgb_to_hsv_jnp(rgb)
-    h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]      # (T, N)
-    fg, bg, gain = ema_background_scan(
-        v, bg0, gain0, alpha=alpha, threshold=threshold, bg_valid=bg_valid)
+    h, s, v = hsv[..., 0], hsv[..., 1], hsv[..., 2]      # (C, T, N)
+    fg, bg, gain = jax.vmap(
+        lambda vc, bc, gc: ema_background_scan(
+            vc, bc, gc, alpha=alpha, threshold=threshold,
+            bg_valid=bg_valid))(v, bg0, gain0)
     fgf = fg.astype(jnp.float32) if use_fg else jnp.ones_like(v)
 
-    joint = joint_bin_index(s, v, bs, bv)                    # (T, N)
-    masks = color_masks(h, hue_ranges)                   # (nc, T, N)
+    joint = joint_bin_index(s, v, bs, bv)                # (C, T, N)
+    masks = color_masks(h, hue_ranges)                   # (nc, C, T, N)
     weights = masks.astype(jnp.float32) * fgf[None]
 
-    def hist_frame(joint_t, w_t):                        # (N,), (nc, N)
-        return jax.vmap(lambda w: jax.ops.segment_sum(
-            w, joint_t, num_segments=bs * bv))(w_t)
-
-    counts = jax.vmap(hist_frame)(joint, jnp.moveaxis(weights, 0, 1))
-    totals = jnp.sum(weights, axis=-1).T                 # (T, nc)
-    fgtot = jnp.sum(fgf, axis=-1)                        # (T,)
+    counts = _masked_hist(joint, weights, bs * bv)       # (C, T, nc, nb)
+    totals = jnp.moveaxis(jnp.sum(weights, axis=-1), 0, -1)   # (C, T, nc)
+    fgtot = jnp.sum(fgf, axis=-1)                        # (C, T)
 
     pf = counts / jnp.maximum(totals, 1.0)[..., None]
-    u = jnp.sum(pf * M_pos.reshape(1, *M_pos.shape), axis=-1)
-    u = u / jnp.maximum(norm, 1e-9)[None]
+    u = jnp.sum(pf * M_pos.reshape(1, 1, *M_pos.shape), axis=-1)
+    u = u / jnp.maximum(norm, 1e-9)[None, None]
     util = jnp.min(u, axis=-1) if op == "and" else jnp.max(u, axis=-1)
-    return counts, totals, fgtot, util, bg, gain
+    if has_cams:
+        return counts, totals, fgtot, util, bg, gain
+    return (counts[0], totals[0], fgtot[0], util[0], bg[0], gain[0])

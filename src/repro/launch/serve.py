@@ -1,10 +1,14 @@
 """Serving launcher: utility-aware load shedding in front of a real
 JAX backend (the paper's architecture with an LM / detector backend).
 
-The Load Shedder gates ingress frames; each admitted frame triggers one
-backend inference whose measured wall time feeds the control loop —
-exactly the paper's token-backpressure arrangement, with the Backend
-Query Executor replaced by a jitted model step.
+One multi-camera ``ShedSession`` fronts the whole camera array: the
+test cameras are scored as a ``(C, T, H, W, 3)`` stack with ONE fused
+device dispatch per batch (per-camera background-state lanes), and the
+same session runs vectorized per-camera admission + queues in the
+simulator. Each admitted frame triggers one backend inference whose
+measured wall time feeds the control loop — exactly the paper's
+token-backpressure arrangement, with the Backend Query Executor
+replaced by a jitted model step.
 
   PYTHONPATH=src python -m repro.launch.serve --frames 600 --fps 30
 """
@@ -18,12 +22,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import RED, overall_qor, train_utility_model
-from repro.core.control import LatencyInputs
-from repro.data.pipeline import interleave_streams, scenario_records
+from repro.core import RED, Query, open_session, overall_qor
+from repro.data.pipeline import camera_array_records, interleave_streams, \
+    scenario_records
 from repro.data.synthetic import generate_dataset
 from repro.models import lm_specs, lm_forward
-from repro.serve.simulator import BackendProfile, PipelineSimulator, build_shedder
+from repro.serve.simulator import BackendProfile, PipelineSimulator
 from repro.sharding.api import materialize
 
 
@@ -34,13 +38,11 @@ def make_lm_backend(arch: str = "smollm-135m", seq: int = 64):
     fwd = jax.jit(lambda p, b: lm_forward(cfg, p, b)[0])
     toks = jnp.zeros((1, seq), jnp.int32)
     fwd(params, {"tokens": toks}).block_until_ready()      # warmup
-
     def backend(frame) -> float:
         t0 = time.perf_counter()
         if frame.busy:                                     # DNN stage
             fwd(params, {"tokens": toks}).block_until_ready()
         return time.perf_counter() - t0 + 0.001
-
     return backend
 
 
@@ -53,25 +55,32 @@ def main():
     ap.add_argument("--real-backend", action="store_true")
     args = ap.parse_args()
 
+    h, w = 48, 80
+    query = Query.single(RED, latency_bound=args.latency_bound, fps=args.fps)
+
     print("generating scenarios...")
     scs = generate_dataset(range(args.cams + 3), num_frames=args.frames,
-                           height=48, width=80)
+                           height=h, width=w)
     train, test = scs[:3], scs[3:]
+
+    # one session fronts the whole camera array; fit() trains the query's
+    # utility function and seeds the per-camera admission CDFs
+    session = open_session(query, num_cameras=args.cams, frame_shape=(h, w))
     train_recs = [r for i, s in enumerate(train)
-                  for r in scenario_records(s, i, [RED], fps=args.fps)]
-    pfs = np.stack([r.pf for r in train_recs])
-    labels = np.array([r.label for r in train_recs])
-    model = train_utility_model(pfs, labels, [RED])
-    train_us = [float(model.score(r.pf)) for r in train_recs]
+                  for r in scenario_records(s, i, list(query.colors),
+                                            fps=args.fps)]
+    model = session.fit(np.stack([r.pf for r in train_recs]),
+                        np.array([r.label for r in train_recs]))
 
-    streams = [scenario_records(s, i, [RED], fps=args.fps)
-               for i, s in enumerate(test)]
+    # score the C test cameras in ONE fused dispatch per batch; records
+    # arrive with in-pipeline utilities
+    streams = camera_array_records(test, list(query.colors), model=model,
+                                   fps=args.fps)
     recs = interleave_streams(streams)
-    us = [float(model.score(r.pf)) for r in recs]
+    us = [r.utility for r in recs]
 
-    shedder = build_shedder(model, train_us, args.latency_bound, args.fps * args.cams)
     backend_fn = make_lm_backend() if args.real_backend else None
-    sim = PipelineSimulator(shedder, BackendProfile(), tokens=1,
+    sim = PipelineSimulator(session, BackendProfile(), tokens=1,
                             backend_fn=backend_fn)
     res = sim.run(recs, us)
     objs = [r.objects for r in recs]

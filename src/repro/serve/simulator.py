@@ -4,6 +4,13 @@ Camera(s) -> [net] -> Load Shedder (admission + utility queue) -> [net]
 -> Backend Query Executor (token backpressure, filter stage + DNN stage)
 -> Metrics Collector -> Control Loop.
 
+The shedder is anything with the shared serving surface —
+``offer``/``next_frame``/``tick``, ``report_backend_latency`` /
+``report_ingress_fps``, ``latency_bound``, ``expected_proc`` — i.e. a
+multi-camera ``repro.core.session.ShedSession`` (the standard entry:
+``open_session(query, num_cameras, ...)``) or a bare single-camera
+``LoadShedder``.
+
 The backend is pluggable: a latency model (deterministic, matching the
 paper's filter-vs-DNN split) or a real JAX model step. Deterministic
 given seeds, so control-loop experiments are reproducible.
@@ -12,14 +19,13 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.control import ControlLoop, LatencyInputs
+from repro.core.control import LatencyInputs
+from repro.core.session import ShedSession
 from repro.core.shedder import LoadShedder
-from repro.core.threshold import UtilityCDF
-from repro.core.utility import UtilityModel
 from repro.data.pipeline import FrameRecord
 
 
@@ -64,7 +70,7 @@ class SimResult:
 
 
 class PipelineSimulator:
-    def __init__(self, shedder: LoadShedder,
+    def __init__(self, shedder: Union[ShedSession, LoadShedder],
                  backend: BackendProfile = BackendProfile(),
                  tokens: int = 1,
                  latency_inputs: LatencyInputs = LatencyInputs(),
@@ -105,7 +111,7 @@ class PipelineSimulator:
         last_fps_win: List[float] = []
         counter = 0
 
-        lb = self.shedder.control.latency_bound
+        lb = self.shedder.latency_bound
 
         def send_if_possible(now):
             nonlocal free_tokens
@@ -116,7 +122,7 @@ class PipelineSimulator:
                 f = item
                 # expired frames cannot meet the bound; shed them here
                 # rather than burning a backend token (Eq. 20 intent)
-                exp_done = now + self.li.net_ls_q + self.shedder.control.proc_q.value
+                exp_done = now + self.li.net_ls_q + self.shedder.expected_proc()
                 if exp_done - f.t_gen > lb:
                     self.shedder.stats.dropped_queue += 1
                     self.shedder.stats.sent -= 1
@@ -142,17 +148,16 @@ class PipelineSimulator:
                 f, t_sent, lat = payload
                 free_tokens += 1
                 processed.append(ProcessedFrame(f, t_sent, now))
-                self.shedder.control.report_backend_latency(lat)
+                self.shedder.report_backend_latency(lat)
                 send_if_possible(now)
             else:  # control tick
                 cutoff = now - 2.0
                 last_fps_win[:] = [t for t in last_fps_win if t >= cutoff]
                 if last_fps_win:
-                    self.shedder.control.report_ingress_fps(
-                        len(last_fps_win) / 2.0)
+                    self.shedder.report_ingress_fps(len(last_fps_win) / 2.0)
                 snap = self.shedder.tick()
                 snap["t"] = now
-                snap["proc_q"] = self.shedder.control.proc_q.value
+                snap["proc_q"] = self.shedder.expected_proc()
                 trace.append(snap)
                 if any(e[1] == EVT_ARRIVE for e in events):
                     push(now + self.control_period, EVT_CTRL, None)
@@ -163,7 +168,7 @@ class PipelineSimulator:
         # processed set (what reached the backend).
         processed_ids = {id(p.frame) for p in processed}
         kept_mask = [id(f) in processed_ids for f in offered]
-        lb = self.shedder.control.latency_bound
+        lb = self.shedder.latency_bound
         violations = sum(1 for p in processed if p.e2e > lb)
         stats = {
             "offered": len(offered),
@@ -173,12 +178,3 @@ class PipelineSimulator:
             "shedder": self.shedder.stats,
         }
         return SimResult(processed, offered, kept_mask, violations, stats, trace)
-
-
-def build_shedder(model: Optional[UtilityModel], train_utilities,
-                  latency_bound: float, fps: float,
-                  latency_inputs: LatencyInputs = LatencyInputs(),
-                  queue_size: int = 8) -> LoadShedder:
-    cdf = UtilityCDF(train_utilities)
-    control = ControlLoop(latency_bound, fps, latency_inputs)
-    return LoadShedder(model, cdf, control, queue_size)

@@ -8,7 +8,9 @@ import pytest
 from repro.core import (
     RED,
     YELLOW,
+    Query,
     drop_rate,
+    open_session,
     overall_qor,
     train_utility_model,
 )
@@ -16,7 +18,7 @@ from repro.core.control import LatencyInputs
 from repro.data.background import batch_foreground
 from repro.data.pipeline import interleave_streams, scenario_records
 from repro.data.synthetic import combined_label, generate_dataset
-from repro.serve.simulator import BackendProfile, PipelineSimulator, build_shedder
+from repro.serve.simulator import BackendProfile, PipelineSimulator
 
 
 @pytest.fixture(scope="module")
@@ -70,7 +72,8 @@ def test_hypothesis2_latency_bounded_under_load(dataset, trained):
     model, train_us = trained
     recs = scenario_records(dataset[4], 9, [RED], fps=10.0)
     us = [float(model.score(r.pf)) for r in recs]
-    sh = build_shedder(model, train_us, latency_bound=1.0, fps=10.0)
+    sh = open_session(Query.single(RED, latency_bound=1.0, fps=10.0),
+                      num_cameras=1, model=model, train_utilities=train_us)
     res = PipelineSimulator(sh, BackendProfile(), tokens=1, seed=1).run(recs, us)
     lat = res.e2e_latencies()
     assert len(lat) > 0
@@ -91,7 +94,10 @@ def test_hypothesis3_beats_content_agnostic(dataset, trained):
     us = np.array([float(model.score(r.pf)) for r in recs])
     objs = [r.objects for r in recs]
     fps_total = 20.0
-    sh = build_shedder(model, train_us, latency_bound=1.0, fps=fps_total)
+    # two cameras, one session: per-camera CDFs/thresholds/queues, shared
+    # backend throughput split across the array
+    sh = open_session(Query.single(RED, latency_bound=1.0, fps=10.0),
+                      num_cameras=2, model=model, train_utilities=train_us)
     res = PipelineSimulator(sh, BackendProfile(), tokens=1, seed=1).run(recs, list(us))
     q_util = overall_qor(objs, res.kept_mask)
     r_fixed = max(0.0, 1.0 - (1.0 / 0.5) / fps_total)   # Eq. 19, proc=500ms
