@@ -23,6 +23,7 @@ BENCHES = [
     ("fig13a_control_loop", "benchmarks.bench_control_loop"),
     ("fig13b_14_multicam", "benchmarks.bench_multicam"),
     ("fig15_overhead", "benchmarks.bench_overhead"),
+    ("serve_step_fused", "benchmarks.bench_serve_step"),
     ("roofline_summary", "benchmarks.roofline"),
 ]
 

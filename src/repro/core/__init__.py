@@ -23,6 +23,7 @@ from repro.core.session import (
     Query,
     SessionState,
     ShedSession,
+    StepResult,
     open_session,
 )
 
@@ -33,5 +34,6 @@ __all__ = [
     "UtilityQueue", "LoadShedder", "ShedderStats", "UtilityCDF",
     "B_S", "B_V", "UtilityModel", "batch_utilities", "frame_features",
     "hue_fraction", "pixel_fraction_matrix", "train_utility_model",
-    "IngestResult", "Query", "SessionState", "ShedSession", "open_session",
+    "IngestResult", "Query", "SessionState", "ShedSession", "StepResult",
+    "open_session",
 ]

@@ -15,38 +15,65 @@ array*:
     An explicit JAX pytree of per-camera state lanes: ``(C, N)``
     background rows and ``(C,)`` illumination gains (the fused ingest
     kernel's carried state), per-camera utility-CDF ring buffers and
-    admission thresholds (Eq. 16–17), and the control loop's EWMAs
-    (Eq. 18–20). Every leaf is an array, so the whole thing
-    checkpoints through ``repro.train.checkpoint`` and round-trips the
-    serve path across restarts. The utility-ordered queues hold live
-    frame payloads and are deliberately *not* part of the state.
+    admission thresholds (Eq. 16–17), the control loop's EWMAs
+    (Eq. 18–20), and the utility-ordered queues as fixed-capacity
+    ``(C, K)`` utility/seq lanes. Every leaf is an array, so the whole
+    serve path — queues included — checkpoints through
+    ``repro.train.checkpoint`` and round-trips across restarts. (Queued
+    frame *payloads* are live host objects keyed by seq; a restored
+    session falls back to ``(cam, seq)`` index pairs for entries whose
+    payloads did not survive.)
 
 ``ShedSession``
-    The method surface every consumer builds on: ``ingest`` runs a
-    ``(C, T, H, W, 3)`` camera array through ONE fused Pallas/oracle
-    dispatch per batch (RGB->HSV + EMA background subtraction + PF
-    features + utility, per-camera state lanes carried across batches);
-    ``admit`` applies vectorized admission + queue decisions per
-    camera; ``offer``/``next_frame``/``tick`` are the frame-at-a-time
-    serving surface the pipeline simulator drives; ``checkpoint`` /
-    ``restore`` persist the state pytree.
+    The method surface every consumer builds on. ``step`` is the serve
+    hot loop: a ``(C, T, H, W, 3)`` camera batch goes from fused ingest
+    through CDF maintenance, vectorized admission, queue selection and
+    threshold re-derivation without utilities ever leaving the
+    compute path — only compact ``(C, T)`` int8 decision codes and
+    evicted queue indices come back. ``ingest``/``admit``/``tick`` are
+    the split phases of the same machinery; ``offer``/``offer_batch``/
+    ``next_frame`` are the frame-at-a-time serving surface the pipeline
+    simulator drives; ``checkpoint``/``restore`` persist the state
+    pytree.
+
+Serve-control implementations (``serve=``), mirroring the ingest
+layer's backend-aware dispatch:
+
+``"device"``
+    SessionState lanes live as jnp device arrays and ``step`` is ONE
+    jitted, donated-buffer XLA program (ingest kernel + ring-buffer CDF
+    push + ``u < threshold`` admission + top-cap queue selection + one
+    batched (C, W) quantile sort). The TPU serving path.
+
+``"host"``
+    Lanes are NumPy arrays and the identical algorithms run as
+    vectorized NumPy — the compiled-CPU serving path (XLA's CPU sort
+    lowering is far slower than ``np.sort``, exactly why ingest also
+    dispatches per backend). Bit-identical float32 results; the two
+    impls are parity-tested against each other and against the scalar
+    heapq/`threshold_from_sorted` reference.
 
 ``open_session(query, num_cameras, ...)`` is the entry point.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import shed_queue as sq
 from repro.core.colors import COLORS, Color
 from repro.core.control import LatencyInputs
-from repro.core.shed_queue import UtilityQueue
 from repro.core.shedder import ShedderStats
-from repro.core.threshold import threshold_from_sorted
+from repro.core.threshold import (
+    thresholds_from_lanes_dev,
+    thresholds_from_lanes_host,
+)
 from repro.core.utility import (
     B_S,
     B_V,
@@ -54,9 +81,16 @@ from repro.core.utility import (
     batch_utilities,
     train_utility_model,
 )
-from repro.kernels.hsv_features.ops import IngestState, ingest_pipeline
+from repro.kernels.hsv_features.ops import (
+    IngestState,
+    default_impl,
+    ingest_core,
+    ingest_pipeline,
+    query_constants,
+)
 
 # admit() decision codes — (C, T) int8 arrays, vectorized per camera
+# (offer_batch marks padding slots that carried no frame with -1)
 ADMIT = 0
 SHED_ADMISSION = 1
 SHED_QUEUE = 2
@@ -142,19 +176,27 @@ class SessionState:
         latency estimates; ``fps_obs (C,)`` (+ ``fps_seen``) — observed
         per-camera ingress rates (Eq. 18–19 inputs).
       * ``queue_cap (C,)`` — dynamic queue sizes (Eq. 20).
+      * ``q_util`` / ``q_seq (C, K)`` + ``q_next_seq (C,)`` — the
+        utility-ordered queues as array lanes (``repro.core.shed_queue``
+        ordering contract; empty slots are ``(-inf, -1)``). ``K`` is the
+        physical bound; the *effective* size is ``queue_cap`` clipped
+        to it.
     """
-    bg: np.ndarray          # (C, N) float32
-    gain: np.ndarray        # (C,) float32
-    bg_valid: np.ndarray    # () bool
-    cdf_buf: np.ndarray     # (C, W) float32
-    cdf_len: np.ndarray     # (C,) int32
-    cdf_pos: np.ndarray     # (C,) int32
-    threshold: np.ndarray   # (C,) float32
-    proc_q: np.ndarray      # (C,) float32
-    proc_seen: np.ndarray   # (C,) bool
-    fps_obs: np.ndarray     # (C,) float32
-    fps_seen: np.ndarray    # (C,) bool
-    queue_cap: np.ndarray   # (C,) int32
+    bg: Any          # (C, N) float32
+    gain: Any        # (C,) float32
+    bg_valid: Any    # () bool
+    cdf_buf: Any     # (C, W) float32
+    cdf_len: Any     # (C,) int32
+    cdf_pos: Any     # (C,) int32
+    threshold: Any   # (C,) float32
+    proc_q: Any      # (C,) float32
+    proc_seen: Any   # (C,) bool
+    fps_obs: Any     # (C,) float32
+    fps_seen: Any    # (C,) bool
+    queue_cap: Any   # (C,) int32
+    q_util: Any      # (C, K) float32
+    q_seq: Any       # (C, K) int32
+    q_next_seq: Any  # (C,) int32
 
     @property
     def num_cameras(self) -> int:
@@ -167,21 +209,25 @@ class SessionState:
     @classmethod
     def fresh(cls, num_cameras: int, npix: int = 0, *,
               cdf_window: int = 4096, fps: float = 10.0,
-              queue_size: int = 8) -> "SessionState":
+              queue_size: int = 8, queue_capacity: int = 64,
+              xp=np) -> "SessionState":
         C = int(num_cameras)
+        K = max(int(queue_capacity), int(queue_size), 1)
+        q_util, q_seq, q_next = sq.make_lanes(C, K, xp=xp)
         return cls(
-            bg=np.zeros((C, npix), np.float32),
-            gain=np.ones((C,), np.float32),
-            bg_valid=np.asarray(False),
-            cdf_buf=np.zeros((C, cdf_window), np.float32),
-            cdf_len=np.zeros((C,), np.int32),
-            cdf_pos=np.zeros((C,), np.int32),
-            threshold=np.full((C,), -np.inf, np.float32),
-            proc_q=np.zeros((C,), np.float32),
-            proc_seen=np.zeros((C,), bool),
-            fps_obs=np.full((C,), float(fps), np.float32),
-            fps_seen=np.zeros((C,), bool),
-            queue_cap=np.full((C,), int(queue_size), np.int32),
+            bg=xp.zeros((C, npix), xp.float32),
+            gain=xp.ones((C,), xp.float32),
+            bg_valid=xp.asarray(False),
+            cdf_buf=xp.zeros((C, cdf_window), xp.float32),
+            cdf_len=xp.zeros((C,), xp.int32),
+            cdf_pos=xp.zeros((C,), xp.int32),
+            threshold=xp.full((C,), -xp.inf, xp.float32),
+            proc_q=xp.zeros((C,), xp.float32),
+            proc_seen=xp.zeros((C,), bool),
+            fps_obs=xp.full((C,), float(fps), xp.float32),
+            fps_seen=xp.zeros((C,), bool),
+            queue_cap=xp.full((C,), int(queue_size), xp.int32),
+            q_util=q_util, q_seq=q_seq, q_next_seq=q_next,
         )
 
 
@@ -191,6 +237,281 @@ class IngestResult:
     pf: np.ndarray                 # (C, T, nc, bs, bv)
     hue_fraction: np.ndarray       # (C, T, nc)
     utility: Optional[np.ndarray]  # (C, T) — None without a trained model
+
+
+@dataclass(frozen=True)
+class StepResult:
+    """Compact host-side outcome of one serve ``step`` — all that
+    crosses back from the device program.
+
+    ``decisions``: (C, T) int8 codes (``ADMIT`` / ``SHED_ADMISSION`` /
+    ``SHED_QUEUE``; retroactive same-batch queue evictions included).
+    ``pushed_seq``: (C, T) int32 queue seq per admitted slot (-1
+    otherwise). ``evicted``: per-camera int arrays of seqs of
+    *previously queued* frames dropped this step (push evictions of
+    residents plus tick resizes). ``target_drop_rate``: (C,) float32
+    Eq. 19 rates when the step re-derived thresholds, else None.
+    """
+    decisions: np.ndarray
+    pushed_seq: np.ndarray
+    evicted: List[np.ndarray]
+    target_drop_rate: Optional[np.ndarray] = None
+
+
+# ---------------------------------------------------------------------------
+# Serve-step cores — device (traced jnp) and host (vectorized NumPy)
+# twins. Same float32 math, bit-identical outputs; see module docstring.
+# ---------------------------------------------------------------------------
+
+def _ring_push_dev(buf, pos, ln, us, mask):
+    """Append a (C, T) utility batch into the per-camera ring buffers;
+    ``mask`` marks real entries (None = all)."""
+    C, W = buf.shape
+    rows = jnp.arange(C)[:, None]
+    if mask is None:
+        if us.shape[1] >= W:                   # only the tail can survive
+            us = us[:, -W:]
+        T = us.shape[1]
+        idx = (pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]) % W
+        buf = buf.at[rows, idx].set(us)
+        cnt = jnp.full((C,), T, jnp.int32)
+    else:
+        kk = jnp.cumsum(mask.astype(jnp.int32), axis=1)
+        idx = jnp.where(mask, (pos[:, None] + kk - 1) % W, W)
+        buf = buf.at[rows, idx].set(us, mode="drop")
+        cnt = kk[:, -1]
+    pos = ((pos + cnt) % W).astype(jnp.int32)
+    ln = jnp.minimum(ln + cnt, W).astype(jnp.int32)
+    return buf, pos, ln
+
+
+def _ring_push_host(buf, pos, ln, us, mask):
+    """NumPy twin of :func:`_ring_push_dev`; mutates ``buf`` in place,
+    returns (pos', len')."""
+    C, W = buf.shape
+    if mask is None:
+        if us.shape[1] >= W:
+            us = us[:, -W:]
+        T = us.shape[1]
+        idx = (pos[:, None] + np.arange(T, dtype=np.int32)[None, :]) % W
+        buf[np.arange(C)[:, None], idx] = us
+        cnt = np.full((C,), T, np.int32)
+    else:
+        kk = np.cumsum(mask.astype(np.int32), axis=1)
+        idx = (pos[:, None] + kk - 1) % W
+        r, t = np.nonzero(mask)
+        buf[r, idx[r, t]] = us[r, t]
+        cnt = kk[:, -1].astype(np.int32)
+    pos = ((pos + cnt) % W).astype(np.int32)
+    ln = np.minimum(ln + cnt, W).astype(np.int32)
+    return pos, ln
+
+
+def _tick_core_dev(state: SessionState, min_proc: float, budget: float):
+    """Eq. 18–20 re-derivation on device: target rates from the metric
+    lanes, thresholds via ONE batched (C, W) sort, queue caps + resize."""
+    C = state.threshold.shape[0]
+    p = jnp.maximum(state.proc_q, min_proc)
+    # single-division form of Eq. 19's 1 - (ST/C)/fps: bit-stable under
+    # XLA (the two-division chain gets algebraically rewritten by the
+    # compiler, which would break device/host bit parity)
+    rates = jnp.clip(
+        1.0 - 1.0 / (p * C * jnp.maximum(state.fps_obs, 1e-9)),
+        0.0, 1.0).astype(jnp.float32)
+    threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len, rates)
+    cap = jnp.maximum((budget / p + 1e-9).astype(jnp.int32) - 1, 1)
+    q_util, q_seq, resize_ev = sq.resize_dev(state.q_util, state.q_seq, cap)
+    state = dataclasses.replace(
+        state, threshold=threshold, queue_cap=cap.astype(jnp.int32),
+        q_util=q_util, q_seq=q_seq)
+    return state, rates, resize_ev
+
+
+def _tick_core_host(state: SessionState, min_proc: float, budget: float):
+    """NumPy twin of :func:`_tick_core_dev`; mutates state in place."""
+    C = state.threshold.shape[0]
+    p = np.maximum(state.proc_q, min_proc)
+    rates = np.clip(
+        1.0 - np.float32(1.0) / (p * C * np.maximum(state.fps_obs, 1e-9)),
+        0.0, 1.0).astype(np.float32)
+    state.threshold = thresholds_from_lanes_host(
+        state.cdf_buf, state.cdf_len, rates)
+    cap = np.maximum((budget / p + 1e-9).astype(np.int32) - 1, 1)
+    state.queue_cap = cap.astype(np.int32)
+    resize_ev = sq.resize_host(state.q_util, state.q_seq, cap)
+    return rates, resize_ev
+
+
+def _control_core_dev(state: SessionState, util, present, *,
+                      update_cdf: bool, do_tick: bool,
+                      min_proc: float, budget: float):
+    """CDF push -> admission -> queue selection -> (optional) tick, all
+    traced. Returns (state', outputs-dict of compact arrays)."""
+    util = util.astype(jnp.float32)
+    C, T = util.shape
+    rows = jnp.arange(C)[:, None]
+    cdf_buf, cdf_pos, cdf_len = state.cdf_buf, state.cdf_pos, state.cdf_len
+    if update_cdf:
+        cdf_buf, cdf_pos, cdf_len = _ring_push_dev(
+            cdf_buf, cdf_pos, cdf_len, util, present)
+    shed = util < state.threshold[:, None]
+    admit = ~shed if present is None else (present & ~shed)
+    decisions = jnp.where(admit, ADMIT, SHED_ADMISSION).astype(jnp.int8)
+    if present is not None:
+        decisions = jnp.where(present, decisions, jnp.int8(-1))
+    q_util, q_seq, q_next, pushed_seq, ev_s, ev_b = sq.push_batch_dev(
+        state.q_util, state.q_seq, state.q_next_seq, util, admit,
+        state.queue_cap)
+    # retroactive SHED_QUEUE flips for this batch's evicted frames: a
+    # scatter-max (codes are 0 <= 1 <= 2, dummy writes use -1 = no-op)
+    flip = ev_b >= 0
+    decisions = decisions.at[rows, jnp.where(flip, ev_b, 0)].max(
+        jnp.where(flip, jnp.int8(SHED_QUEUE), jnp.int8(-1)))
+    state = dataclasses.replace(
+        state, cdf_buf=cdf_buf, cdf_pos=cdf_pos, cdf_len=cdf_len,
+        q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
+    out = {
+        "decisions": decisions,
+        "pushed_seq": pushed_seq,
+        "evicted_resident": jnp.where((ev_b < 0) & (ev_s >= 0), ev_s, -1),
+        "push_evictions": (ev_s >= 0).sum(axis=-1).astype(jnp.int32),
+        "rates": jnp.zeros((C,), jnp.float32),
+        "resize_evicted": jnp.full_like(state.q_seq, -1),
+    }
+    if do_tick:
+        state, rates, resize_ev = _tick_core_dev(state, min_proc, budget)
+        out["rates"] = rates
+        out["resize_evicted"] = resize_ev
+    return state, out
+
+
+def _control_core_host(state: SessionState, util, present, *,
+                       update_cdf: bool, do_tick: bool,
+                       min_proc: float, budget: float):
+    """NumPy twin of :func:`_control_core_dev`; mutates state in place."""
+    util = np.asarray(util, np.float32)
+    C, T = util.shape
+    if update_cdf:
+        state.cdf_pos, state.cdf_len = _ring_push_host(
+            state.cdf_buf, state.cdf_pos, state.cdf_len, util, present)
+    shed = util < state.threshold[:, None]
+    admit = ~shed if present is None else (present & ~shed)
+    decisions = np.where(admit, ADMIT, SHED_ADMISSION).astype(np.int8)
+    if present is not None:
+        decisions = np.where(present, decisions, np.int8(-1))
+    q_next, pushed_seq, ev_s, ev_b = sq.push_batch_host(
+        state.q_util, state.q_seq, state.q_next_seq, util, admit,
+        state.queue_cap)
+    state.q_next_seq = q_next
+    r, i = np.nonzero(ev_b >= 0)
+    decisions[r, ev_b[r, i]] = SHED_QUEUE
+    out = {
+        "decisions": decisions,
+        "pushed_seq": pushed_seq,
+        "evicted_resident": np.where((ev_b < 0) & (ev_s >= 0), ev_s, -1),
+        "push_evictions": (ev_s >= 0).sum(axis=-1).astype(np.int32),
+        "rates": np.zeros((C,), np.float32),
+        "resize_evicted": np.full_like(state.q_seq, -1),
+    }
+    if do_tick:
+        rates, resize_ev = _tick_core_host(state, min_proc, budget)
+        out["rates"] = rates
+        out["resize_evicted"] = resize_ev
+    return state, out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("update_cdf", "do_tick", "min_proc", "budget"),
+    donate_argnames=("state",))
+def _control_step_dev(state, util, *, update_cdf, do_tick, min_proc, budget):
+    return _control_core_dev(state, util, None, update_cdf=update_cdf,
+                             do_tick=do_tick, min_proc=min_proc,
+                             budget=budget)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("update_cdf", "do_tick", "min_proc", "budget"),
+    donate_argnames=("state",))
+def _control_masked_dev(state, util, present, *, update_cdf, do_tick,
+                        min_proc, budget):
+    return _control_core_dev(state, util, present, update_cdf=update_cdf,
+                             do_tick=do_tick, min_proc=min_proc,
+                             budget=budget)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hue_ranges", "bs", "bv", "alpha", "fg_threshold",
+                     "use_fg", "bg_valid", "op", "impl", "interpret",
+                     "update_cdf", "do_tick", "min_proc", "budget"),
+    donate_argnames=("state",))
+def _serve_step_dev(state, frames, M_pos, norm, *, hue_ranges, bs, bv,
+                    alpha, fg_threshold, use_fg, bg_valid, op, impl,
+                    interpret, update_cdf, do_tick, min_proc, budget):
+    """The tentpole device program: fused ingest -> CDF push ->
+    admission -> queue selection -> threshold/queue-size control, ONE
+    jitted dispatch with the state pytree's buffers donated. Utilities
+    are produced and consumed on device; only the compact decision /
+    eviction arrays and the (small) state leaves read by the host ever
+    transfer."""
+    bg0 = state.bg if bg_valid else jnp.zeros_like(state.bg)
+    gain0 = state.gain if bg_valid else jnp.ones_like(state.gain)
+    _, _, _, util, bg, gain = ingest_core(
+        frames, bg0, gain0, M_pos, norm, hue_ranges=hue_ranges, bs=bs,
+        bv=bv, alpha=alpha, threshold=fg_threshold, use_fg=use_fg,
+        bg_valid=bg_valid, op=op, impl=impl, interpret=interpret)
+    state = dataclasses.replace(state, bg=bg, gain=gain,
+                                bg_valid=jnp.asarray(True))
+    return _control_core_dev(state, util, None, update_cdf=update_cdf,
+                             do_tick=do_tick, min_proc=min_proc,
+                             budget=budget)
+
+
+@functools.partial(jax.jit, static_argnames=("update_cdf",),
+                   donate_argnames=("state",))
+def _offer_dev(state, cam, u, *, update_cdf):
+    """Single-frame admission on device: scalar CDF push + threshold
+    compare + single queue push for one camera lane."""
+    C, W = state.cdf_buf.shape
+    u = jnp.asarray(u, jnp.float32)
+    cdf_buf, cdf_pos, cdf_len = state.cdf_buf, state.cdf_pos, state.cdf_len
+    if update_cdf:
+        cdf_buf = cdf_buf.at[cam, cdf_pos[cam]].set(u)
+        cdf_pos = cdf_pos.at[cam].set((cdf_pos[cam] + 1) % W)
+        cdf_len = cdf_len.at[cam].set(jnp.minimum(cdf_len[cam] + 1, W))
+    shed = u < state.threshold[cam]
+    do_push = (jnp.arange(C) == cam) & ~shed
+    q_util, q_seq, q_next, pushed_seq, evicted_seq, inc_ev = sq.push_one_dev(
+        state.q_util, state.q_seq, state.q_next_seq,
+        jnp.full((C,), u, jnp.float32), do_push, state.queue_cap)
+    code = jnp.where(shed, jnp.int8(SHED_ADMISSION),
+                     jnp.where(inc_ev[cam], jnp.int8(SHED_QUEUE),
+                               jnp.int8(ADMIT)))
+    state = dataclasses.replace(
+        state, cdf_buf=cdf_buf, cdf_pos=cdf_pos, cdf_len=cdf_len,
+        q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
+    return state, code, pushed_seq[cam], evicted_seq[cam]
+
+
+@functools.partial(jax.jit, donate_argnames=("state",))
+def _pop_any_dev(state):
+    q_util, q_seq, cam, seq = sq.pop_best_dev(state.q_util, state.q_seq)
+    return dataclasses.replace(state, q_util=q_util, q_seq=q_seq), cam, seq
+
+
+@functools.partial(jax.jit, donate_argnames=("state",))
+def _pop_cam_dev(state, cam):
+    q_util, q_seq, cam, seq = sq.pop_best_dev(state.q_util, state.q_seq, cam)
+    return dataclasses.replace(state, q_util=q_util, q_seq=q_seq), cam, seq
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("min_proc", "budget"),
+                   donate_argnames=("state",))
+def _tick_dev(state, *, min_proc, budget):
+    return _tick_core_dev(state, min_proc, budget)
 
 
 class ShedSession:
@@ -205,13 +526,15 @@ class ShedSession:
                  model: Optional[UtilityModel] = None,
                  train_utilities: Optional[Sequence[float]] = None,
                  queue_size: int = 8,
+                 queue_capacity: int = 64,
                  latency_inputs: Optional[LatencyInputs] = None,
                  cdf_window: int = 4096,
                  ewma_alpha: float = 0.2, ewma_alpha_up: float = 0.6,
                  min_proc: float = 1e-6,
                  update_cdf_online: bool = True,
                  impl: Optional[str] = None,
-                 interpret: Optional[bool] = None) -> None:
+                 interpret: Optional[bool] = None,
+                 serve: Optional[str] = None) -> None:
         if num_cameras < 1:
             raise ValueError("num_cameras must be >= 1")
         self.query = query
@@ -224,17 +547,26 @@ class ShedSession:
         self.update_cdf_online = bool(update_cdf_online)
         self.impl = impl
         self.interpret = interpret
+        if serve is None:
+            serve = "device" if jax.default_backend() == "tpu" else "host"
+        if serve not in ("host", "device"):
+            raise ValueError(f"unknown serve impl {serve!r}")
+        self.serve = serve
+        self._xp = jnp if serve == "device" else np
         self._queue_size = int(queue_size)
         npix = frame_shape[0] * frame_shape[1] if frame_shape else 0
         self.state = SessionState.fresh(
             num_cameras, npix, cdf_window=cdf_window, fps=query.fps,
-            queue_size=queue_size)
-        self.queues: List[UtilityQueue] = [
-            UtilityQueue(queue_size) for _ in range(self.num_cameras)]
+            queue_size=queue_size, queue_capacity=queue_capacity,
+            xp=self._xp)
+        self.queue_capacity = int(self.state.q_util.shape[1])
+        self._payloads: List[Dict[int, Any]] = [
+            {} for _ in range(self.num_cameras)]
         self.stats = ShedderStats()
         self.per_camera_offered = np.zeros((self.num_cameras,), np.int64)
         self.per_camera_dropped = np.zeros((self.num_cameras,), np.int64)
         self._lane_of: Dict[Any, int] = {}
+        self._consts: Optional[Tuple[Any, Tuple[Any, Any, str]]] = None
         if train_utilities is not None:
             self.seed_cdf(train_utilities)
 
@@ -251,6 +583,22 @@ class ShedSession:
             lane = self._lane_of[cam_id] = len(self._lane_of)
         return lane
 
+    @property
+    def _budget(self) -> float:
+        li = self.latency_inputs
+        return (self.query.latency_bound - li.net_cam_ls - li.net_ls_q
+                - li.proc_cam)
+
+    def _model_constants(self):
+        """The (M_pos, norm, op) device constants the serve step bakes
+        in — computed once per trained model (fit/restore swap the model
+        object, invalidating the cache), not per step."""
+        if self._consts is None or self._consts[0] is not self.model:
+            q = self.query
+            self._consts = (self.model, query_constants(
+                self.model, q.num_colors, q.bs, q.bv, q.op))
+        return self._consts[1]
+
     # -- training / scoring --------------------------------------------------
 
     def fit(self, pfs: np.ndarray, labels: np.ndarray) -> UtilityModel:
@@ -265,18 +613,19 @@ class ShedSession:
     def seed_cdf(self, utilities: Union[np.ndarray, Sequence[float]]) -> None:
         """Fill every camera's CDF window with a shared utility history."""
         us = np.asarray(utilities, np.float32).reshape(-1)
-        self._cdf_push(np.broadcast_to(us, (self.num_cameras, us.size)))
+        us = np.broadcast_to(us, (self.num_cameras, us.size))
+        st = self.state
+        if self.serve == "device":
+            buf, pos, ln = _ring_push_dev(
+                st.cdf_buf, st.cdf_pos, st.cdf_len, jnp.asarray(us), None)
+            st.cdf_buf, st.cdf_pos, st.cdf_len = buf, pos, ln
+        else:
+            st.cdf_pos, st.cdf_len = _ring_push_host(
+                st.cdf_buf, st.cdf_pos, st.cdf_len, us, None)
 
     # -- fused ingest --------------------------------------------------------
 
-    def ingest(self, frames: np.ndarray, *, impl: Optional[str] = None,
-               interpret: Optional[bool] = None) -> IngestResult:
-        """Score one frame batch for the whole camera array in ONE fused
-        device dispatch, carrying per-camera background state.
-
-        frames: (C, T, H, W, 3) float32 RGB in [0, 255] — or
-        (T, H, W, 3) for single-camera sessions.
-        """
+    def _check_frames(self, frames: np.ndarray) -> np.ndarray:
         frames = np.asarray(frames, np.float32)
         if frames.ndim == 4:
             frames = frames[None]
@@ -291,7 +640,19 @@ class ShedSession:
                 raise ValueError(
                     f"frame size {n} px does not match carried background "
                     f"state {st.bg.shape}")
-            st.bg = np.zeros((self.num_cameras, n), np.float32)
+            st.bg = self._xp.zeros((self.num_cameras, n), self._xp.float32)
+        return frames
+
+    def ingest(self, frames: np.ndarray, *, impl: Optional[str] = None,
+               interpret: Optional[bool] = None) -> IngestResult:
+        """Score one frame batch for the whole camera array in ONE fused
+        device dispatch, carrying per-camera background state.
+
+        frames: (C, T, H, W, 3) float32 RGB in [0, 255] — or
+        (T, H, W, 3) for single-camera sessions.
+        """
+        frames = self._check_frames(frames)
+        st = self.state
         state_in = (IngestState(bg=st.bg, gain=st.gain)
                     if bool(st.bg_valid) else None)
         q = self.query
@@ -301,9 +662,10 @@ class ShedSession:
             op=q.op, bs=q.bs, bv=q.bv,
             impl=impl if impl is not None else self.impl,
             interpret=interpret if interpret is not None else self.interpret)
-        st.bg = np.asarray(state_out.bg, np.float32)
-        st.gain = np.asarray(state_out.gain, np.float32).reshape(-1)
-        st.bg_valid = np.asarray(True)
+        xp = self._xp
+        st.bg = xp.asarray(state_out.bg, xp.float32)
+        st.gain = xp.asarray(state_out.gain, xp.float32).reshape(-1)
+        st.bg_valid = xp.asarray(True)
         return IngestResult(
             pf=np.asarray(pf), hue_fraction=np.asarray(hf),
             utility=None if util is None else np.asarray(util))
@@ -314,10 +676,11 @@ class ShedSession:
         return IngestState(bg=self.state.bg, gain=self.state.gain)
 
     def set_ingest_state(self, state: Optional[IngestState]) -> None:
+        xp = self._xp
         if state is None:
-            self.state.bg_valid = np.asarray(False)
+            self.state.bg_valid = xp.asarray(False)
             return
-        bg = np.asarray(state.bg, np.float32)
+        bg = xp.asarray(state.bg, xp.float32)
         if bg.ndim == 1:
             bg = bg[None]
         if bg.shape[0] != self.num_cameras:
@@ -325,52 +688,136 @@ class ShedSession:
                 f"state has {bg.shape[0]} camera lanes, session has "
                 f"{self.num_cameras}")
         self.state.bg = bg
-        self.state.gain = np.asarray(
-            state.gain, np.float32).reshape(-1)
-        self.state.bg_valid = np.asarray(True)
+        self.state.gain = xp.asarray(state.gain, xp.float32).reshape(-1)
+        self.state.bg_valid = xp.asarray(True)
 
-    # -- utility CDF (Eq. 16–17), vectorized over cameras --------------------
+    # -- the fused serve step (tentpole) -------------------------------------
 
-    def _cdf_push(self, us: np.ndarray) -> None:
-        """Append utilities (C, k) into the per-camera ring buffers."""
-        st = self.state
-        C, W = st.cdf_buf.shape
-        us = np.asarray(us, np.float32)
-        if us.shape[1] >= W:                       # keep only the last W
-            us = us[:, -W:]
-        k = us.shape[1]
-        if k == 0:
-            return
-        idx = (st.cdf_pos[:, None] + np.arange(k)[None]) % W
-        st.cdf_buf[np.arange(C)[:, None], idx] = us
-        st.cdf_pos = ((st.cdf_pos + k) % W).astype(np.int32)
-        st.cdf_len = np.minimum(st.cdf_len + k, W).astype(np.int32)
+    def step(self, frames: Optional[np.ndarray] = None, *,
+             utilities: Optional[np.ndarray] = None,
+             items: Optional[Sequence[Sequence[Any]]] = None,
+             tick: bool = True,
+             impl: Optional[str] = None,
+             interpret: Optional[bool] = None) -> StepResult:
+        """One serve-loop iteration for the whole camera array: score ->
+        CDF push -> admission -> queue selection -> (``tick=True``)
+        threshold/queue-size re-derivation.
 
-    def _thresholds_for(self, rates: np.ndarray) -> np.ndarray:
-        """Per-camera Eq. 17 via the shared ``threshold_from_sorted``
-        formula (float32 lanes: the threshold is the next float32 above
-        the r-quantile value, dropping everything <= it)."""
-        st = self.state
-        th = np.full((self.num_cameras,), -np.inf, np.float32)
-        for c in range(self.num_cameras):
-            n = int(st.cdf_len[c])
-            th[c] = threshold_from_sorted(np.sort(st.cdf_buf[c, :n]),
-                                          float(rates[c]))
-        return th
+        Give either ``frames`` — a (C, T, H, W, 3) batch scored by the
+        fused ingest kernel inside the same dispatch (requires a
+        trained model) — or precomputed ``utilities`` (C, T) to run the
+        control plane alone. Under ``serve="device"`` the frames form
+        is ONE jitted XLA program with donated state buffers; under
+        ``serve="host"`` scoring is the jitted ingest oracle and the
+        control plane is its vectorized-NumPy twin.
 
-    def observed_drop_rate(self, cam: int = 0) -> float:
-        """Fraction of camera ``cam``'s history below its threshold."""
-        st = self.state
-        n = int(st.cdf_len[cam])
-        if n == 0:
-            return 0.0
-        return float((st.cdf_buf[cam, :n] < st.threshold[cam]).mean())
+        ``items[c][t]`` are frame payloads for ``next_frame``; absent,
+        queued frames are identified by their ``(cam, t)`` index pair.
+        Only compact decision/eviction arrays return to the host — see
+        :class:`StepResult`.
+        """
+        if (frames is None) == (utilities is None):
+            raise ValueError("pass exactly one of frames= or utilities=")
+        kw = dict(update_cdf=self.update_cdf_online, do_tick=bool(tick),
+                  min_proc=self.min_proc, budget=self._budget)
+        if frames is not None:
+            if self.model is None:
+                raise ValueError("step(frames=...) needs a trained model "
+                                 "(call fit() or pass model=)")
+            frames = self._check_frames(frames)
+            if frames.shape[1] == 0:
+                raise ValueError("empty frame batch")
+            q = self.query
+            if self.serve == "device":
+                n = frames.shape[2] * frames.shape[3]
+                flat = jnp.asarray(frames).reshape(
+                    self.num_cameras, frames.shape[1], n, 3)
+                M_pos, norm, op = self._model_constants()
+                use_impl = impl if impl is not None else self.impl
+                if use_impl is None:
+                    use_impl = default_impl()
+                self.state, out = _serve_step_dev(
+                    self.state, flat, M_pos, norm,
+                    hue_ranges=q.hue_ranges, bs=q.bs, bv=q.bv,
+                    alpha=q.alpha, fg_threshold=q.threshold,
+                    use_fg=q.use_foreground,
+                    bg_valid=bool(self.state.bg_valid), op=op,
+                    impl=use_impl,
+                    interpret=(interpret if interpret is not None
+                               else self.interpret), **kw)
+                return self._absorb_control(out, items, tick)
+            util = self.ingest(frames, impl=impl,
+                               interpret=interpret).utility
+        else:
+            util = np.asarray(utilities, np.float32)
+            if util.ndim == 1:
+                util = util[None]
+            if util.shape[0] != self.num_cameras:
+                raise ValueError(
+                    f"expected ({self.num_cameras}, T) utilities, "
+                    f"got {util.shape}")
+            if util.shape[1] == 0:
+                raise ValueError("empty utility batch")
+        if self.serve == "device":
+            self.state, out = _control_step_dev(
+                self.state, jnp.asarray(util, jnp.float32), **kw)
+        else:
+            self.state, out = _control_core_host(
+                self.state, util, None, **kw)
+        return self._absorb_control(out, items, tick)
+
+    def _absorb_control(self, out: Dict[str, Any],
+                        items: Optional[Sequence[Sequence[Any]]],
+                        ticked: bool) -> StepResult:
+        """Fold a control step's compact outputs into host bookkeeping:
+        stats, payload registry, per-camera counters."""
+        decisions = np.asarray(out["decisions"])
+        pushed_seq = np.asarray(out["pushed_seq"])
+        ev_res = np.asarray(out["evicted_resident"])
+        push_ev = np.asarray(out["push_evictions"])
+        C = decisions.shape[0]
+        offered = decisions >= 0
+        self.stats.offered += int(offered.sum())
+        self.stats.dropped_admission += int((decisions == SHED_ADMISSION).sum())
+        self.stats.dropped_queue += int(push_ev.sum())
+        self.per_camera_offered += offered.sum(axis=1)
+        res_cnt = (ev_res >= 0).sum(axis=1)
+        self.per_camera_dropped += (decisions > ADMIT).sum(axis=1) + res_cnt
+        evicted: List[np.ndarray] = []
+        for c in range(C):
+            pl = self._payloads[c]
+            for t in np.flatnonzero(decisions[c] == ADMIT):
+                item = items[c][t] if items is not None else (c, int(t))
+                pl[int(pushed_seq[c, t])] = item
+            evs = ev_res[c][ev_res[c] >= 0]
+            for s in evs:
+                pl.pop(int(s), None)
+            evicted.append(evs.astype(np.int64))
+        rates = None
+        if ticked:
+            rates = np.asarray(out["rates"])
+            rz = np.asarray(out["resize_evicted"])
+            cnt = (rz >= 0).sum(axis=1)
+            self.stats.dropped_queue += int(cnt.sum())
+            self.per_camera_dropped += cnt
+            for c in range(C):
+                evs = rz[c][rz[c] >= 0]
+                for s in evs:
+                    self._payloads[c].pop(int(s), None)
+                if evs.size:
+                    evicted[c] = np.concatenate(
+                        [evicted[c], evs.astype(np.int64)])
+        return StepResult(decisions=decisions, pushed_seq=pushed_seq,
+                          evicted=evicted, target_drop_rate=rates)
 
     # -- admission + queues --------------------------------------------------
 
     def admit(self, utilities: np.ndarray,
               items: Optional[Sequence[Sequence[Any]]] = None) -> np.ndarray:
-        """Vectorized admission + queue decisions for a scored batch.
+        """Vectorized admission + queue decisions for a scored batch
+        (float32; the thresholds are float32 lanes, and using one dtype
+        end-to-end keeps batch and frame-at-a-time decisions identical
+        on boundary utilities).
 
         utilities: (C, T) per-camera frame utilities (a (T,) vector is
         accepted for single-camera sessions). ``items[c][t]`` are the
@@ -384,34 +831,8 @@ class ShedSession:
         batch flips to ``SHED_QUEUE`` retroactively, so the returned
         codes describe what actually survived the batch.
         """
-        u = np.asarray(utilities, np.float64)
-        if u.ndim == 1:
-            u = u[None]
-        if u.shape[0] != self.num_cameras:
-            raise ValueError(
-                f"expected ({self.num_cameras}, T) utilities, got {u.shape}")
-        C, T = u.shape
-        if self.update_cdf_online:
-            self._cdf_push(u)
-        decisions = np.where(u < self.state.threshold[:, None],
-                             SHED_ADMISSION, ADMIT).astype(np.int8)
-        self.stats.offered += C * T
-        self.stats.dropped_admission += int((decisions == SHED_ADMISSION).sum())
-        self.per_camera_offered += T
-        for c in range(C):
-            pushed: Dict[int, int] = {}          # id(item) -> batch index
-            for i in np.flatnonzero(decisions[c] == ADMIT):
-                item = items[c][i] if items is not None else (c, int(i))
-                evicted = self.queues[c].push(item, float(u[c, i]))
-                pushed[id(item)] = int(i)
-                if evicted is not None:
-                    self.stats.dropped_queue += 1
-                    if id(evicted) in pushed:    # same-batch frame out
-                        decisions[c, pushed[id(evicted)]] = SHED_QUEUE
-                    else:                        # older resident evicted
-                        self.per_camera_dropped[c] += 1
-        self.per_camera_dropped += (decisions != ADMIT).sum(axis=1)
-        return decisions
+        return self.step(utilities=utilities, items=items,
+                         tick=False).decisions
 
     def offer(self, item: Any, utility: float,
               cam: Optional[int] = None) -> str:
@@ -422,48 +843,120 @@ class ShedSession:
         are mapped to lanes in first-seen order), else lane 0.
         """
         c = self.lane(getattr(item, "cam_id", 0)) if cam is None else int(cam)
-        u = float(utility)
+        u = np.float32(utility)
         self.stats.offered += 1
         self.per_camera_offered[c] += 1
-        if self.update_cdf_online:
-            self._cdf_push_one(c, u)
-        if u < self.state.threshold[c]:
+        st = self.state
+        if self.serve == "device":
+            self.state, code, pushed, evicted = _offer_dev(
+                st, c, u, update_cdf=self.update_cdf_online)
+            code, pushed, evicted = int(code), int(pushed), int(evicted)
+        else:
+            if self.update_cdf_online:
+                W = st.cdf_buf.shape[1]
+                p = int(st.cdf_pos[c])
+                st.cdf_buf[c, p] = u
+                st.cdf_pos[c] = (p + 1) % W
+                st.cdf_len[c] = min(int(st.cdf_len[c]) + 1, W)
+            if u < st.threshold[c]:
+                code, pushed, evicted = SHED_ADMISSION, -1, -1
+            else:
+                do = np.arange(self.num_cameras) == c
+                st.q_next_seq, ps, es, ie = sq.push_one_host(
+                    st.q_util, st.q_seq, st.q_next_seq,
+                    np.full((self.num_cameras,), u, np.float32), do,
+                    st.queue_cap)
+                pushed, evicted = int(ps[c]), int(es[c])
+                code = SHED_QUEUE if ie[c] else ADMIT
+        if code == SHED_ADMISSION:
             self.stats.dropped_admission += 1
             self.per_camera_dropped[c] += 1
             return "shed_admission"
-        evicted = self.queues[c].push(item, u)
-        if evicted is not None:
+        if evicted >= 0:
             self.stats.dropped_queue += 1
             self.per_camera_dropped[c] += 1
-            if evicted is item:
-                return "shed_queue"
+        if code == SHED_QUEUE:
+            return "shed_queue"
+        self._payloads[c][pushed] = item
+        if evicted >= 0:
+            self._payloads[c].pop(evicted, None)
         return "queued"
 
-    def _cdf_push_one(self, c: int, u: float) -> None:
-        st = self.state
-        W = st.cdf_buf.shape[1]
-        st.cdf_buf[c, st.cdf_pos[c]] = u
-        st.cdf_pos[c] = (st.cdf_pos[c] + 1) % W
-        st.cdf_len[c] = min(st.cdf_len[c] + 1, W)
+    def offer_batch(self, items: Sequence[Any],
+                    utilities: Sequence[float],
+                    cams: Optional[Sequence[int]] = None) -> List[str]:
+        """Admit several frames that arrived together — ONE vectorized
+        control dispatch instead of per-frame ``offer`` calls, with
+        identical decisions/state (thresholds only move on ``tick``, so
+        coalescing commutes). Lanes come from ``cams`` or each item's
+        ``cam_id``; multiple frames may share a camera (kept in order).
+
+        Returns per-item 'queued' | 'shed_admission' | 'shed_queue'.
+        """
+        if cams is None:
+            lanes = [self.lane(getattr(it, "cam_id", 0)) for it in items]
+        else:
+            lanes = [int(c) for c in cams]
+        C = self.num_cameras
+        per_cam: List[List[int]] = [[] for _ in range(C)]
+        for i, c in enumerate(lanes):
+            per_cam[c].append(i)
+        T = max((len(v) for v in per_cam), default=0)
+        if T == 0:
+            return []
+        util = np.zeros((C, T), np.float32)
+        present = np.zeros((C, T), bool)
+        slot_of: Dict[Tuple[int, int], int] = {}
+        batch_items: List[List[Any]] = [[None] * T for _ in range(C)]
+        for c in range(C):
+            for t, i in enumerate(per_cam[c]):
+                util[c, t] = np.float32(utilities[i])
+                present[c, t] = True
+                batch_items[c][t] = items[i]
+                slot_of[(c, t)] = i
+        kw = dict(update_cdf=self.update_cdf_online, do_tick=False,
+                  min_proc=self.min_proc, budget=self._budget)
+        if self.serve == "device":
+            self.state, out = _control_masked_dev(
+                self.state, jnp.asarray(util), jnp.asarray(present), **kw)
+        else:
+            self.state, out = _control_core_host(
+                self.state, util, present, **kw)
+        res = self._absorb_control(out, batch_items, ticked=False)
+        codes = [""] * len(items)
+        for (c, t), i in slot_of.items():
+            codes[i] = _DECISION_NAMES[int(res.decisions[c, t])]
+        return codes
 
     def next_frame(self, cam: Optional[int] = None) -> Optional[Any]:
         """Transmission control: send the best queued frame — of one
         camera, or (default) the best across the whole array."""
-        if cam is not None:
-            item = self.queues[cam].pop_best()
+        st = self.state
+        if self.serve == "device":
+            if cam is None:
+                self.state, c, seqv = _pop_any_dev(st)
+            else:
+                self.state, c, seqv = _pop_cam_dev(st, int(cam))
+            c, seqv = int(c), int(seqv)
         else:
-            best_c, best_u = -1, -np.inf
-            for c, q in enumerate(self.queues):
-                u = q.peek_best_utility()
-                if u is not None and u > best_u:
-                    best_c, best_u = c, u
-            item = self.queues[best_c].pop_best() if best_c >= 0 else None
-        if item is not None:
-            self.stats.sent += 1
+            c, seqv = sq.pop_best_host(st.q_util, st.q_seq, cam)
+        if seqv < 0:
+            return None
+        item = self._payloads[c].pop(seqv, (c, seqv))
+        self.stats.sent += 1
         return item
 
     def __len__(self) -> int:
-        return sum(len(q) for q in self.queues)
+        return int((np.asarray(self.state.q_seq) >= 0).sum())
+
+    def observed_drop_rate(self, cam: int = 0) -> float:
+        """Fraction of camera ``cam``'s history below its threshold."""
+        st = self.state
+        n = int(st.cdf_len[cam])
+        if n == 0:
+            return 0.0
+        buf = np.asarray(st.cdf_buf)
+        return float((buf[cam, :n] < np.asarray(st.threshold)[cam]).mean())
 
     # -- control loop (Eq. 18–20), vectorized over cameras -------------------
 
@@ -474,62 +967,66 @@ class ShedSession:
     def expected_proc(self) -> float:
         """Current backend per-frame latency estimate (shared backend:
         every lane carries the same value)."""
-        return float(self.state.proc_q.max(initial=0.0))
+        return float(np.asarray(self.state.proc_q).max(initial=0.0))
 
     def report_backend_latency(self, proc_latency: float) -> None:
         """Shared-backend metric feed: asymmetric EWMA on every lane
         (overload must be detected fast, recovery can be smoothed)."""
-        st = self.state
+        st, xp = self.state, self._xp
         x = max(float(proc_latency), self.min_proc)
-        a = np.where(x > st.proc_q, self.ewma_alpha_up, self.ewma_alpha)
-        st.proc_q = np.where(st.proc_seen, st.proc_q + a * (x - st.proc_q),
-                             x).astype(np.float32)
-        st.proc_seen = np.ones_like(st.proc_seen)
+        a = xp.where(x > st.proc_q, self.ewma_alpha_up, self.ewma_alpha)
+        st.proc_q = xp.where(st.proc_seen, st.proc_q + a * (x - st.proc_q),
+                             x).astype(xp.float32)
+        st.proc_seen = xp.ones_like(st.proc_seen)
 
     def report_ingress_fps(self, fps: float, cam: Optional[int] = None) -> None:
         """Observed ingress rate: per camera, or an aggregate rate split
         evenly across the array's lanes."""
-        st = self.state
+        st, xp = self.state, self._xp
         if cam is None:
-            x = np.full((self.num_cameras,), float(fps) / self.num_cameras)
+            x = xp.full((self.num_cameras,), float(fps) / self.num_cameras)
+            upd = xp.ones((self.num_cameras,), bool)
         else:
-            x = st.fps_obs.copy()
-            x[cam] = float(fps)
-        upd = np.ones((self.num_cameras,), bool) if cam is None else \
-            np.arange(self.num_cameras) == cam
+            x = xp.where(xp.arange(self.num_cameras) == cam, float(fps),
+                         st.fps_obs)
+            upd = xp.arange(self.num_cameras) == cam
         ew = st.fps_obs + self.ewma_alpha * (x - st.fps_obs)
-        st.fps_obs = np.where(upd, np.where(st.fps_seen, ew, x),
-                              st.fps_obs).astype(np.float32)
+        st.fps_obs = xp.where(upd, xp.where(st.fps_seen, ew, x),
+                              st.fps_obs).astype(xp.float32)
         st.fps_seen = st.fps_seen | upd
 
     def tick(self) -> Dict[str, Any]:
         """Re-derive per-camera thresholds (Eq. 17–19) and queue sizes
-        (Eq. 20) from the current metric lanes. Vectorized over C."""
+        (Eq. 20) from the current metric lanes — one batched quantile +
+        queue resize over all C camera lanes."""
+        if self.serve == "device":
+            self.state, rates, resize_ev = _tick_dev(
+                self.state, min_proc=self.min_proc, budget=self._budget)
+            rates, resize_ev = np.asarray(rates), np.asarray(resize_ev)
+        else:
+            rates, resize_ev = _tick_core_host(
+                self.state, self.min_proc, self._budget)
+        cnt = (resize_ev >= 0).sum(axis=1)
+        self.stats.dropped_queue += int(cnt.sum())
+        self.per_camera_dropped += cnt
+        for c in range(self.num_cameras):
+            for s in resize_ev[c][resize_ev[c] >= 0]:
+                self._payloads[c].pop(int(s), None)
         st = self.state
-        li = self.latency_inputs
-        p = np.maximum(st.proc_q, self.min_proc)            # (C,)
-        supported = 1.0 / p                                 # shared backend
-        share = supported / self.num_cameras                # per-camera slice
-        rates = np.clip(1.0 - share / np.maximum(st.fps_obs, 1e-9), 0.0, 1.0)
-        st.threshold = self._thresholds_for(rates)
-        budget = (self.query.latency_bound - li.net_cam_ls - li.net_ls_q
-                  - li.proc_cam)
-        cap = np.maximum((budget / p + 1e-9).astype(np.int64) - 1, 1)
-        st.queue_cap = cap.astype(np.int32)
-        for c, q in enumerate(self.queues):
-            dropped = q.resize(int(cap[c]))
-            self.stats.dropped_queue += len(dropped)
-            self.per_camera_dropped[c] += len(dropped)
-        finite = np.isfinite(st.threshold)
+        threshold = np.asarray(st.threshold)
+        # report the EFFECTIVE queue sizes: Eq. 20's cap clipped to the
+        # physical (C, K) lane bound the queues actually honor
+        queue_cap = np.minimum(np.asarray(st.queue_cap), self.queue_capacity)
+        finite = np.isfinite(threshold)
         return {
             "target_drop_rate": float(rates.mean()),
-            "threshold": float(st.threshold[finite].mean()) if finite.any()
+            "threshold": float(threshold[finite].mean()) if finite.any()
             else -np.inf,
-            "queue_size": int(st.queue_cap.max()),
+            "queue_size": int(queue_cap.max()),
             "per_camera": {
                 "target_drop_rate": rates.tolist(),
-                "threshold": st.threshold.tolist(),
-                "queue_size": st.queue_cap.tolist(),
+                "threshold": threshold.tolist(),
+                "queue_size": queue_cap.tolist(),
             },
         }
 
@@ -551,7 +1048,9 @@ class ShedSession:
     def checkpoint(self, path, step: int = 0, *, async_: bool = False):
         """Persist the SessionState pytree (plus the trained utility
         model) via ``repro.train.checkpoint`` (atomic, async-capable).
-        Queue contents are live frame payloads and are not persisted."""
+        Queue lanes persist; queued frame *payloads* are live host
+        objects and do not — restored queue entries fall back to
+        ``(cam, seq)`` pairs."""
         from repro.train import checkpoint as ckpt
         meta = {
             "kind": "shed_session",
@@ -576,8 +1075,16 @@ class ShedSession:
         template = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                     for k, v in tree.items()}
         out, step, meta = ckpt.restore(path, template, step=step)
+        # queued payloads are live host objects of the PREVIOUS life of
+        # this session; restored queue entries must not alias them (seq
+        # numbers restart/collide across checkpoints)
+        self._payloads = [{} for _ in range(self.num_cameras)]
         for k in self.state.as_dict():
-            setattr(self.state, k, np.asarray(out[k]))
+            # host lanes must be writable copies (restored buffers can be
+            # read-only views of device arrays)
+            leaf = (jnp.asarray(out[k]) if self.serve == "device"
+                    else np.array(out[k]))
+            setattr(self.state, k, leaf)
         if meta.get("has_model"):
             self.model = UtilityModel(
                 self.query.colors, np.asarray(out["model_M_pos"]),
@@ -593,13 +1100,18 @@ def open_session(query: Query, num_cameras: int = 1, **kw: Any) -> ShedSession:
     Keyword options: ``frame_shape=(H, W)`` (pre-allocates background
     lanes, required before ``restore``), ``model`` (a trained
     UtilityModel; or call ``session.fit``), ``train_utilities`` (seeds
-    the admission CDFs), ``queue_size``, ``latency_inputs``,
-    ``cdf_window``, ``impl``/``interpret`` (ingest dispatch overrides).
+    the admission CDFs), ``queue_size`` (initial per-camera queue cap),
+    ``queue_capacity`` (the physical (C, K) lane bound the dynamic cap
+    is clipped to), ``latency_inputs``, ``cdf_window``,
+    ``impl``/``interpret`` (ingest dispatch overrides), and ``serve``
+    ("device" = jitted XLA serve step with donated state buffers,
+    "host" = bit-identical vectorized NumPy; default backend-aware).
     """
     return ShedSession(query, num_cameras, **kw)
 
 
 __all__ = [
     "ADMIT", "SHED_ADMISSION", "SHED_QUEUE",
-    "IngestResult", "Query", "SessionState", "ShedSession", "open_session",
+    "IngestResult", "Query", "SessionState", "ShedSession", "StepResult",
+    "open_session",
 ]

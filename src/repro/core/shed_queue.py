@@ -1,9 +1,42 @@
-"""Utility-ordered bounded queue with dynamic sizing (paper §IV-D).
+"""Utility-ordered bounded queues with dynamic sizing (paper §IV-D).
 
-Second layer of admission control: when the queue is full, the
+Second layer of admission control: when a queue is full, the
 lowest-utility frame is evicted (whether resident or incoming); the
-transmission layer always sends the current *best* frame. The queue
-never shrinks below size 1 ("avoid starving the downstream operators").
+transmission layer always sends the current *best* frame. Queues never
+shrink below size 1 ("avoid starving the downstream operators").
+
+Two implementations of the same contract:
+
+``UtilityQueue``
+    The original scalar heapq queue — one Python object per camera.
+    Kept as the executable *reference semantics* (the array lanes are
+    property-tested against it) and as the single-camera
+    ``LoadShedder``'s queue.
+
+Array lanes (``lanes_*`` functions)
+    The serve-path hot form: C cameras' queues as fixed-capacity
+    ``(C, K)`` ``util``/``seq`` lanes (empty slots ``util=-inf``,
+    ``seq=-1``) plus a ``(C,)`` ``next_seq`` push counter, so queue
+    state joins the session's checkpointable pytree and admission is
+    pure array code. Each operation exists twice with bit-identical
+    float32 results: ``*_dev`` (pure jnp, traceable into one jitted
+    serve step) and ``*_host`` (vectorized NumPy, the compiled-CPU
+    serving path — mutates the lane arrays in place).
+
+    Ordering contract (must match the heapq reference exactly):
+      * eviction removes the minimum by ``(utility, seq)`` — lowest
+        utility first, FIFO (oldest ``seq``) among ties;
+      * ``pop_best`` removes the maximum utility, oldest ``seq`` among
+        ties; the any-camera variant prefers the lowest camera index
+        among utility ties.
+      * a batch of pushes into a bounded queue leaves exactly the
+        top-``cap`` of residents ∪ admitted by ``(utility, seq)`` —
+        order-free top-k selection is equivalent to sequential
+        push/evict because eviction always removes the current minimum
+        of a totally ordered set.
+
+    Utilities are assumed finite (the model's scores are); ``-inf`` is
+    reserved for empty slots and ``+inf`` for sort sentinels.
 """
 from __future__ import annotations
 
@@ -11,6 +44,12 @@ import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT32_MAX = np.int32(2**31 - 1)
 
 
 @dataclass(order=True)
@@ -82,3 +121,286 @@ class UtilityQueue:
         while self._min and self._min[0].dropped:
             heapq.heappop(self._min)
         return self._min[0].utility if self._min else None
+
+
+# ---------------------------------------------------------------------------
+# Array-backed queue lanes — shared helpers
+# ---------------------------------------------------------------------------
+
+def make_lanes(num_cameras: int, capacity: int, xp=np):
+    """Fresh empty (C, K) lanes: (util, seq, next_seq)."""
+    return (xp.full((num_cameras, capacity), -xp.inf, xp.float32),
+            xp.full((num_cameras, capacity), -1, xp.int32),
+            xp.zeros((num_cameras,), xp.int32))
+
+
+def _order_key_host(util: np.ndarray, seq: np.ndarray) -> np.ndarray:
+    """Ascending uint64 key realizing the (utility, seq) lexicographic
+    order — the float32 bits are mapped order-preservingly into the
+    high word, the (signed) seq into the low word."""
+    ub = np.ascontiguousarray(util, np.float32).view(np.uint32)
+    fkey = np.where(ub >> 31 == 1, ~ub, ub | np.uint32(0x80000000))
+    skey = np.asarray(seq, np.int32).view(np.uint32) ^ np.uint32(0x80000000)
+    return (fkey.astype(np.uint64) << np.uint64(32)) | skey.astype(np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# Top-cap selection (the batch push / resize core)
+# ---------------------------------------------------------------------------
+#
+# Sorting candidates ascending by (util, seq) puts empty slots
+# ((-inf, -1)) first, then valid entries worst-to-best. With per-row
+# counts (n_inval invalid, n_evict to drop), the evicted entries occupy
+# sorted positions [n_inval, n_inval + n_evict) and the survivors are
+# the final n_keep positions; gathering the last K positions re-packs
+# the lanes (sorted ascending — a canonical layout both impls share).
+
+def _select_core(u_sorted, s_sorted, b_sorted, total, keep_cap, K, xp):
+    C, M = u_sorted.shape
+    n_keep = xp.minimum(total, keep_cap)
+    n_evict = total - n_keep
+    n_inval = M - total
+    pos = xp.arange(M, dtype=xp.int32)
+    evict = ((pos[None, :] >= n_inval[:, None])
+             & (pos[None, :] < (n_inval + n_evict)[:, None]))
+    evicted_seq = xp.where(evict, s_sorted, -1).astype(xp.int32)
+    evicted_bidx = xp.where(evict, b_sorted, -1).astype(xp.int32)
+    alive = pos[None, M - K:] >= (M - n_keep)[:, None]
+    new_util = xp.where(alive, u_sorted[:, M - K:],
+                        xp.float32(-xp.inf)).astype(xp.float32)
+    new_seq = xp.where(alive, s_sorted[:, M - K:], -1).astype(xp.int32)
+    return new_util, new_seq, evicted_seq, evicted_bidx
+
+
+def select_dev(util, seq, bidx, keep_cap, K):
+    """Device top-cap selection (see module docstring for the contract)."""
+    u_s, s_s, b_s = jax.lax.sort((util.astype(jnp.float32),
+                                  seq.astype(jnp.int32),
+                                  bidx.astype(jnp.int32)),
+                                 num_keys=2, dimension=-1)
+    total = (seq >= 0).sum(axis=-1).astype(jnp.int32)
+    return _select_core(u_s, s_s, b_s, total, keep_cap, K, jnp)
+
+
+def select_host(util, seq, bidx, keep_cap, K):
+    """NumPy twin of :func:`select_dev` (bit-identical results)."""
+    order = np.argsort(_order_key_host(util, seq), axis=-1, kind="stable")
+    u_s = np.take_along_axis(np.asarray(util, np.float32), order, -1)
+    s_s = np.take_along_axis(np.asarray(seq, np.int32), order, -1)
+    b_s = np.take_along_axis(np.asarray(bidx, np.int32), order, -1)
+    total = (seq >= 0).sum(axis=-1).astype(np.int32)
+    return _select_core(u_s, s_s, b_s, total, keep_cap, K, np)
+
+
+# ---------------------------------------------------------------------------
+# Batch push (vectorized admission)
+# ---------------------------------------------------------------------------
+
+def _push_batch_args(util, seq, next_seq, u, admit, cap, xp):
+    C, K = util.shape
+    T = u.shape[1]
+    npush = xp.cumsum(admit.astype(xp.int32), axis=1)
+    seq_in = next_seq[:, None] + npush - 1
+    cand_u = xp.concatenate(
+        [util, xp.where(admit, u, xp.float32(-xp.inf))], axis=1)
+    cand_s = xp.concatenate([seq, xp.where(admit, seq_in, -1)],
+                            axis=1).astype(xp.int32)
+    tcols = xp.broadcast_to(xp.arange(T, dtype=xp.int32)[None, :], (C, T))
+    cand_b = xp.concatenate(
+        [xp.full((C, K), -1, xp.int32), xp.where(admit, tcols, -1)], axis=1)
+    cap_eff = xp.clip(cap, 1, K).astype(xp.int32)
+    pushed_seq = xp.where(admit, seq_in, -1).astype(xp.int32)
+    new_next = (next_seq + npush[:, -1]).astype(xp.int32)
+    return cand_u, cand_s, cand_b, cap_eff, pushed_seq, new_next
+
+
+def push_batch_dev(util, seq, next_seq, u, admit, cap):
+    """Push a (C, T) utility batch (``admit`` masks real pushes) into
+    the lanes; equivalent to T sequential heapq pushes per camera.
+
+    Returns (util', seq', next_seq', pushed_seq (C, T),
+    evicted_seq (C, K+T), evicted_bidx (C, K+T)): ``pushed_seq`` maps
+    batch slots to assigned seqs (-1 not pushed); ``evicted_bidx``
+    marks evictions of *this batch's* frames by batch column (-1 for
+    evicted pre-batch residents, whose seqs are in ``evicted_seq``).
+    """
+    K = util.shape[1]
+    cand_u, cand_s, cand_b, cap_eff, pushed_seq, new_next = _push_batch_args(
+        util, seq, next_seq, jnp.asarray(u, jnp.float32), admit, cap, jnp)
+    nu, ns, ev_s, ev_b = select_dev(cand_u, cand_s, cand_b, cap_eff, K)
+    return nu, ns, new_next, pushed_seq, ev_s, ev_b
+
+
+def push_batch_host(util, seq, next_seq, u, admit, cap):
+    """NumPy twin of :func:`push_batch_dev`; mutates util/seq in place
+    and returns (next_seq', pushed_seq, evicted_seq, evicted_bidx)."""
+    K = util.shape[1]
+    cand_u, cand_s, cand_b, cap_eff, pushed_seq, new_next = _push_batch_args(
+        util, seq, next_seq, np.asarray(u, np.float32), admit, cap, np)
+    nu, ns, ev_s, ev_b = select_host(cand_u, cand_s, cand_b, cap_eff, K)
+    util[...], seq[...] = nu, ns
+    return new_next, pushed_seq, ev_s, ev_b
+
+
+# ---------------------------------------------------------------------------
+# Single push (the frame-at-a-time offer path)
+# ---------------------------------------------------------------------------
+#
+# No sort: find the first free slot (queue not full) or replace the
+# worst entry (full). Replacement keeps slot layout stable, so the two
+# impls stay bitwise identical through mixed push/pop sequences.
+
+def push_one_dev(util, seq, next_seq, u, do_push, cap):
+    """Push u[c] for cameras with do_push[c] (others untouched).
+
+    Returns (util', seq', next_seq', pushed_seq (C,),
+    evicted_seq (C,), incoming_evicted (C,) bool): ``evicted_seq`` is
+    the evicted entry's seq (== pushed_seq when the incoming frame
+    itself lost the comparison; -1 when nothing was evicted).
+    """
+    C, K = util.shape
+    rows = jnp.arange(C)
+    u = jnp.asarray(u, jnp.float32)
+    valid = seq >= 0
+    count = valid.sum(axis=-1)
+    cap_eff = jnp.clip(cap, 1, K)
+    uv = jnp.where(valid, util, jnp.inf)
+    w_util = uv.min(axis=-1)
+    w_cand = valid & (uv == w_util[:, None])
+    w_slot = jnp.where(w_cand, seq, INT32_MAX).argmin(axis=-1)
+    w_seq = seq[rows, w_slot]
+    free_slot = jnp.argmax(~valid, axis=-1)
+    full = count >= cap_eff
+    inc_evicted = do_push & full & (u < w_util)     # tie evicts the resident
+    place = do_push & ~inc_evicted
+    slot = jnp.where(full, w_slot, free_slot)
+    new_util = util.at[rows, slot].set(
+        jnp.where(place, u, util[rows, slot]))
+    new_seq = seq.at[rows, slot].set(
+        jnp.where(place, next_seq, seq[rows, slot]))
+    nn = (next_seq + do_push.astype(jnp.int32)).astype(jnp.int32)
+    pushed_seq = jnp.where(do_push, next_seq, -1).astype(jnp.int32)
+    evicted_seq = jnp.where(
+        inc_evicted, next_seq,
+        jnp.where(place & full, w_seq, -1)).astype(jnp.int32)
+    return new_util, new_seq, nn, pushed_seq, evicted_seq, inc_evicted
+
+
+def push_one_host(util, seq, next_seq, u, do_push, cap):
+    """NumPy twin of :func:`push_one_dev`; mutates util/seq in place."""
+    C, K = util.shape
+    rows = np.arange(C)
+    u = np.asarray(u, np.float32)
+    valid = seq >= 0
+    count = valid.sum(axis=-1)
+    cap_eff = np.clip(cap, 1, K)
+    uv = np.where(valid, util, np.inf)
+    w_util = uv.min(axis=-1)
+    w_cand = valid & (uv == w_util[:, None])
+    w_slot = np.where(w_cand, seq, INT32_MAX).argmin(axis=-1)
+    w_seq = seq[rows, w_slot]
+    free_slot = np.argmax(~valid, axis=-1)
+    full = count >= cap_eff
+    inc_evicted = do_push & full & (u < w_util)
+    place = do_push & ~inc_evicted
+    slot = np.where(full, w_slot, free_slot)
+    util[rows[place], slot[place]] = u[place]
+    seq[rows[place], slot[place]] = next_seq[place]
+    nn = (next_seq + do_push.astype(np.int32)).astype(np.int32)
+    pushed_seq = np.where(do_push, next_seq, -1).astype(np.int32)
+    evicted_seq = np.where(
+        inc_evicted, next_seq,
+        np.where(place & full, w_seq, -1)).astype(np.int32)
+    return nn, pushed_seq, evicted_seq, inc_evicted
+
+
+# ---------------------------------------------------------------------------
+# Resize (Eq. 20 dynamic sizing) and transmission (pop/peek best)
+# ---------------------------------------------------------------------------
+
+def resize_dev(util, seq, cap):
+    """Shrink each row to ``clip(cap, 1, K)`` entries, evicting lowest
+    (util, seq) first. Returns (util', seq', evicted_seq (C, K))."""
+    K = util.shape[1]
+    cap_eff = jnp.clip(cap, 1, K).astype(jnp.int32)
+    nu, ns, ev_s, _ = select_dev(util, seq, jnp.full_like(seq, -1),
+                                 cap_eff, K)
+    return nu, ns, ev_s
+
+
+def resize_host(util, seq, cap):
+    """NumPy twin of :func:`resize_dev`; mutates in place, returns
+    the (C, K) padded evicted-seq array."""
+    K = util.shape[1]
+    cap_eff = np.clip(cap, 1, K).astype(np.int32)
+    nu, ns, ev_s, _ = select_host(util, seq, np.full_like(seq, -1),
+                                  cap_eff, K)
+    util[...], seq[...] = nu, ns
+    return ev_s
+
+
+def _best_slot(util, seq, xp):
+    valid = seq >= 0
+    bu = xp.where(valid, util, xp.float32(-xp.inf)).max(axis=-1)
+    has = valid.any(axis=-1)
+    slot = xp.where(valid & (util == bu[:, None]), seq,
+                    INT32_MAX).argmin(axis=-1)
+    return bu, has, slot.astype(xp.int32)
+
+
+def pop_best_dev(util, seq, cam=None):
+    """Pop the best (max utility, oldest seq) entry of camera ``cam``,
+    or — cam=None — of the whole array (lowest camera index breaks
+    utility ties, matching a sequential strict-``>`` scan).
+
+    Returns (util', seq', cam (int32), popped_seq (int32)); negative
+    ``popped_seq`` means every candidate queue was empty.
+    """
+    C = util.shape[0]
+    bu, has, slot = _best_slot(util, seq, jnp)
+    if cam is None:
+        c = jnp.argmax(bu).astype(jnp.int32)
+        ok = has.any()
+    else:
+        c = jnp.asarray(cam, jnp.int32)
+        ok = has[c]
+    s = slot[c]
+    popped_seq = jnp.where(ok, seq[c, s], -1).astype(jnp.int32)
+    new_util = util.at[c, s].set(jnp.where(ok, -jnp.inf, util[c, s]))
+    new_seq = seq.at[c, s].set(jnp.where(ok, -1, seq[c, s]))
+    return new_util, new_seq, jnp.where(ok, c, -1).astype(jnp.int32), popped_seq
+
+
+def pop_best_host(util, seq, cam=None):
+    """NumPy twin of :func:`pop_best_dev`; mutates in place, returns
+    (cam, popped_seq) as python ints (-1, -1 when empty)."""
+    bu, has, slot = _best_slot(util, seq, np)
+    if cam is None:
+        if not has.any():
+            return -1, -1
+        c = int(np.argmax(bu))
+    else:
+        c = int(cam)
+        if not has[c]:
+            return -1, -1
+    s = int(slot[c])
+    popped = int(seq[c, s])
+    util[c, s] = -np.inf
+    seq[c, s] = -1
+    return c, popped
+
+
+def peek_best_host(util, seq):
+    """(best_utility (C,) with -inf for empty, any_nonempty (C,) bool)."""
+    bu, has, _ = _best_slot(util, seq, np)
+    return bu, has
+
+
+__all__ = [
+    "UtilityQueue", "make_lanes",
+    "select_dev", "select_host",
+    "push_batch_dev", "push_batch_host",
+    "push_one_dev", "push_one_host",
+    "resize_dev", "resize_host",
+    "pop_best_dev", "pop_best_host", "peek_best_host",
+]

@@ -4,12 +4,30 @@ A sliding window of recent frame utilities approximates the utility CDF;
 the threshold for target drop rate r is the smallest utility u_th with
 CDF(u_th) >= r. The window is seeded from the training set and updated
 online so the mapping tracks content drift.
+
+Three forms of the same Eq. 17:
+
+``threshold_from_sorted``
+    The scalar definition on one sorted array (float64 Python index
+    math) — ``UtilityCDF`` and the single-camera ``LoadShedder`` use it.
+
+``thresholds_from_lanes_dev`` / ``thresholds_from_lanes_host``
+    The camera-array form on ``(C, W)`` ring-buffer lanes: ONE batched
+    masked sort + per-row quantile gather. The device version is pure
+    jnp (traceable into the session's fused serve step); the host
+    version is its bit-identical NumPy twin (the compiled-CPU serving
+    path). Both compute the quantile index in *float32*
+    (``ceil(f32(r) * f32(n))``), so the two are bitwise interchangeable;
+    this can differ from the scalar float64 path by one rank only when
+    ``r * n`` rounds across an integer in float32 — astronomically rare
+    and bounded by one sample.
 """
 from __future__ import annotations
 
 from collections import deque
 from typing import Iterable, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -18,7 +36,7 @@ def threshold_from_sorted(v: np.ndarray, r: float) -> float:
 
     The single definition of the quantile-index + nextafter formula —
     ``UtilityCDF`` (scalar, float64) and the session's per-camera lanes
-    (float32 rows) both call it, so they cannot drift apart. The
+    (float32 rows) both follow it, so they cannot drift apart. The
     threshold is the next representable value *in the array's dtype*
     above the r-quantile, dropping everything <= it; r <= 0 maps to
     -inf (shed nothing).
@@ -30,22 +48,68 @@ def threshold_from_sorted(v: np.ndarray, r: float) -> float:
     return float(np.nextafter(v[idx], np.asarray(np.inf, v.dtype)))
 
 
+def thresholds_from_lanes_dev(cdf_buf, cdf_len, rates):
+    """Batched Eq. 17 over camera lanes — ONE (C, W) device sort.
+
+    cdf_buf: (C, W) float32 ring buffers (valid entries occupy slots
+    [0, cdf_len) — the ring writes 0..W-1 before wrapping, and once
+    wrapped every slot is live). cdf_len: (C,) int32. rates: (C,)
+    float32 target drop rates. Returns (C,) float32 thresholds
+    (-inf for empty windows or r <= 0).
+    """
+    C, W = cdf_buf.shape
+    n = cdf_len.astype(jnp.int32)
+    live = jnp.arange(W, dtype=jnp.int32)[None, :] < n[:, None]
+    v = jnp.sort(jnp.where(live, cdf_buf, jnp.inf), axis=-1)
+    r = jnp.asarray(rates, jnp.float32)
+    idx = (jnp.ceil(jnp.minimum(r, 1.0) * n.astype(jnp.float32))
+           .astype(jnp.int32) - 1)
+    idx = jnp.clip(idx, 0, jnp.maximum(n - 1, 0))
+    th = jnp.nextafter(
+        jnp.take_along_axis(v, idx[:, None], axis=-1)[:, 0], jnp.inf)
+    return jnp.where((n == 0) | (r <= 0.0), -jnp.inf, th).astype(jnp.float32)
+
+
+def thresholds_from_lanes_host(cdf_buf: np.ndarray, cdf_len: np.ndarray,
+                               rates: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`thresholds_from_lanes_dev` (bit-identical:
+    the r-quantile order statistic is the same value whether found by a
+    full sort or a partial select). Uses ``np.partition`` per live row
+    — O(W) selection instead of O(W log W) — and skips rows that map to
+    -inf anyway (empty window or r <= 0, where Eq. 17 sheds nothing)."""
+    C, W = cdf_buf.shape
+    n = np.asarray(cdf_len, np.int32)
+    r = np.asarray(rates, np.float32)
+    idx = (np.ceil(np.minimum(r, np.float32(1.0))
+                   * n.astype(np.float32)).astype(np.int32) - 1)
+    idx = np.clip(idx, 0, np.maximum(n - 1, 0))
+    th = np.full((C,), -np.inf, np.float32)
+    for c in np.flatnonzero((n > 0) & (r > 0.0)):
+        k = int(idx[c])
+        th[c] = np.nextafter(
+            np.partition(cdf_buf[c, :n[c]], k)[k], np.float32(np.inf))
+    return th
+
+
 class UtilityCDF:
     def __init__(self, history: Optional[Iterable[float]] = None,
                  window: int = 4096):
         self._buf = deque(maxlen=window)
         if history is not None:
-            for u in history:
-                self._buf.append(float(u))
+            self.update(history)
         self._sorted: Optional[np.ndarray] = None
 
     def __len__(self):
         return len(self._buf)
 
     def update(self, utilities):
-        us = np.atleast_1d(np.asarray(utilities, np.float64))
-        for u in us:
-            self._buf.append(float(u))
+        if hasattr(utilities, "__next__"):      # consume generators once
+            utilities = list(utilities)
+        us = np.atleast_1d(np.asarray(utilities, np.float64)).reshape(-1)
+        w = self._buf.maxlen
+        if w is not None and us.size > w:     # only the tail can survive
+            us = us[-w:]
+        self._buf.extend(us.tolist())
         self._sorted = None
 
     def _view(self) -> np.ndarray:
@@ -74,3 +138,7 @@ class UtilityCDF:
         if len(v) == 0:
             return 0.0
         return float(np.searchsorted(v, u_th, side="left")) / len(v)
+
+
+__all__ = ["UtilityCDF", "threshold_from_sorted",
+           "thresholds_from_lanes_dev", "thresholds_from_lanes_host"]

@@ -75,18 +75,59 @@ class IngestState:
         return self.bg.shape[0] if self.bg.ndim == 2 else None
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "hue_ranges", "bs", "bv", "alpha", "threshold", "use_fg", "bg_valid",
-    "op"))
-def _ingest_jnp(rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv,
-                alpha, threshold, use_fg, bg_valid, op):
-    return ingest_batch_ref(
-        rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv, alpha=alpha,
-        threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op)
+def ingest_core(rgb, bg0, gain0, M_pos, norm, *, hue_ranges, bs, bv,
+                alpha, threshold, use_fg, bg_valid, op, impl, interpret):
+    """Traceable fused-ingest dispatch — the raw kernel/oracle call with
+    NO host-side jit wrapper of its own, so callers building larger
+    device programs (e.g. the session's fused serve step) can trace it
+    inline and keep everything in ONE dispatch.
+
+    rgb: (T, N, 3) or (C, T, N, 3) float32 (frames flattened to
+    pixels). Returns the kernel tuple (counts, totals, fg_total,
+    utility, bg, gain).
+    """
+    if impl == "pallas":
+        return ingest_batch(
+            rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv, alpha=alpha,
+            threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op,
+            interpret=interpret)
+    if impl == "jnp":
+        return ingest_batch_ref(
+            rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv, alpha=alpha,
+            threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op)
+    raise ValueError(f"unknown ingest impl {impl!r}")
+
+
+_ingest_jnp = jax.jit(
+    functools.partial(ingest_core, impl="jnp", interpret=None),
+    static_argnames=("hue_ranges", "bs", "bv", "alpha", "threshold",
+                     "use_fg", "bg_valid", "op"))
 
 
 def default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def query_constants(model, nc: int, bs: int, bv: int, op: Optional[str]):
+    """Resolve the (M_pos, norm, op) constants a compiled shedder bakes
+    in: the trained model's matrices and composition op when present,
+    inert zeros/ones (utilities identically 0) otherwise.
+    """
+    if model is not None:
+        M_pos = jnp.asarray(model.M_pos, jnp.float32).reshape(nc, bs * bv)
+        norm = jnp.asarray(model.norm, jnp.float32)
+        # the trained model defines how per-color utilities compose; a
+        # caller-supplied op (e.g. the label op) must not override it
+        op = model.op
+    else:
+        M_pos = jnp.zeros((nc, bs * bv), jnp.float32)
+        norm = jnp.ones((nc,), jnp.float32)
+        op = op or "or"
+    if op == "single":
+        op = "or"
+    if op not in ("or", "and"):
+        raise ValueError(f"unknown composition op {op!r}")
+    return M_pos, norm, op
 
 
 def ingest_pipeline(rgb, colors: Sequence[Color],
@@ -119,30 +160,19 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
     gain0 = (state.gain if bg_valid
              else jnp.ones(bg_shape[:-1], jnp.float32))
 
-    if model is not None:
-        M_pos = jnp.asarray(model.M_pos, jnp.float32).reshape(nc, bs * bv)
-        norm = jnp.asarray(model.norm, jnp.float32)
-        # the trained model defines how per-color utilities compose; a
-        # caller-supplied op (e.g. the label op) must not override it
-        op = model.op
-    else:
-        M_pos = jnp.zeros((nc, bs * bv), jnp.float32)
-        norm = jnp.ones((nc,), jnp.float32)
-        op = op or "or"
-    if op == "single":
-        op = "or"
-    if op not in ("or", "and"):
-        raise ValueError(f"unknown composition op {op!r}")
+    M_pos, norm, op = query_constants(model, nc, bs, bv, op)
 
     if impl == "pallas":
-        counts, totals, fgtot, util, bg, gain = ingest_batch(
-            rgb_flat, bg0, gain0, M_pos, norm, hue_ranges, bs, bv,
-            alpha=alpha, threshold=threshold, use_fg=use_foreground,
-            bg_valid=bg_valid, op=op, interpret=interpret)
+        counts, totals, fgtot, util, bg, gain = ingest_core(
+            rgb_flat, bg0, gain0, M_pos, norm, hue_ranges=hue_ranges,
+            bs=bs, bv=bv, alpha=alpha, threshold=threshold,
+            use_fg=use_foreground, bg_valid=bg_valid, op=op,
+            impl="pallas", interpret=interpret)
     elif impl == "jnp":
         counts, totals, fgtot, util, bg, gain = _ingest_jnp(
-            rgb_flat, bg0, gain0, M_pos, norm, hue_ranges, bs, bv,
-            alpha, threshold, use_foreground, bg_valid, op)
+            rgb_flat, bg0, gain0, M_pos, norm, hue_ranges=hue_ranges,
+            bs=bs, bv=bv, alpha=alpha, threshold=threshold,
+            use_fg=use_foreground, bg_valid=bg_valid, op=op)
     else:
         raise ValueError(f"unknown ingest impl {impl!r}")
 
@@ -152,5 +182,6 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
     return pf, hf, (util if model is not None else None), new_state
 
 
-__all__ = ["frame_pf", "batch_pf", "ingest_pipeline", "IngestState",
-           "default_impl", "default_interpret"]
+__all__ = ["frame_pf", "batch_pf", "ingest_pipeline", "ingest_core",
+           "query_constants", "IngestState", "default_impl",
+           "default_interpret"]

@@ -9,7 +9,14 @@ The shedder is anything with the shared serving surface —
 ``report_ingress_fps``, ``latency_bound``, ``expected_proc`` — i.e. a
 multi-camera ``repro.core.session.ShedSession`` (the standard entry:
 ``open_session(query, num_cameras, ...)``) or a bare single-camera
-``LoadShedder``.
+``LoadShedder``. With ``batch_arrivals=True`` simultaneous arrivals are
+coalesced through the shedder's vectorized ``offer_batch`` (one array
+dispatch per arrival tick) when it has one. Admission decisions and
+shedder state are identical to sequential offers; transmission timing
+within a coalesced tick can differ when a backend token is free
+mid-tick — sequential mode sends the first arrival before the second
+is even offered, batched mode offers the whole tick and then sends its
+best frame (closer to the paper's best-first transmission intent).
 
 The backend is pluggable: a latency model (deterministic, matching the
 paper's filter-vs-DNN split) or a real JAX model step. Deterministic
@@ -76,13 +83,25 @@ class PipelineSimulator:
                  latency_inputs: LatencyInputs = LatencyInputs(),
                  control_period: float = 0.5,
                  seed: int = 0,
-                 backend_fn: Optional[Callable[[FrameRecord], float]] = None):
+                 backend_fn: Optional[Callable[[FrameRecord], float]] = None,
+                 fps_window: float = 2.0,
+                 batch_arrivals: bool = False):
         self.shedder = shedder
         self.backend = backend
         self.backend_fn = backend_fn
         self.tokens = tokens
         self.li = latency_inputs
         self.control_period = control_period
+        # sliding window (seconds) over which the observed ingress FPS
+        # fed to the control loop is estimated
+        self.fps_window = float(fps_window)
+        # coalesce simultaneous arrivals (e.g. C cameras at a shared
+        # frame tick) into ONE vectorized offer_batch dispatch; admission
+        # decisions and shedder state are identical to sequential offers
+        # (thresholds only move on control ticks) though transmission can
+        # pick the tick's best frame instead of its first when a backend
+        # token is free; shedders without offer_batch fall back
+        self.batch_arrivals = bool(batch_arrivals)
         self.rng = np.random.default_rng(seed)
 
     def run(self, frames: Sequence[FrameRecord],
@@ -109,7 +128,6 @@ class PipelineSimulator:
         offered: List[FrameRecord] = []
         trace: List[dict] = []
         last_fps_win: List[float] = []
-        counter = 0
 
         lb = self.shedder.latency_bound
 
@@ -138,11 +156,24 @@ class PipelineSimulator:
             if now > t_end_guard:
                 break
             if kind == EVT_ARRIVE:
-                f, u = payload
-                offered.append(f)
-                decision = self.shedder.offer(f, u)
-                kept_of[id(f)] = decision == "queued"
-                last_fps_win.append(now)
+                batch = [payload]
+                if self.batch_arrivals:
+                    while (events and events[0][0] == now
+                           and events[0][1] == EVT_ARRIVE):
+                        batch.append(heapq.heappop(events)[3])
+                fs = [f for f, _ in batch]
+                us = [u for _, u in batch]
+                offer_batch = (getattr(self.shedder, "offer_batch", None)
+                               if len(batch) > 1 else None)
+                if offer_batch is not None:
+                    decisions = offer_batch(fs, us)
+                else:
+                    decisions = [self.shedder.offer(f, u)
+                                 for f, u in zip(fs, us)]
+                for f, decision in zip(fs, decisions):
+                    offered.append(f)
+                    kept_of[id(f)] = decision == "queued"
+                    last_fps_win.append(now)
                 send_if_possible(now)
             elif kind == EVT_DONE:
                 f, t_sent, lat = payload
@@ -151,17 +182,17 @@ class PipelineSimulator:
                 self.shedder.report_backend_latency(lat)
                 send_if_possible(now)
             else:  # control tick
-                cutoff = now - 2.0
+                cutoff = now - self.fps_window
                 last_fps_win[:] = [t for t in last_fps_win if t >= cutoff]
                 if last_fps_win:
-                    self.shedder.report_ingress_fps(len(last_fps_win) / 2.0)
+                    self.shedder.report_ingress_fps(
+                        len(last_fps_win) / self.fps_window)
                 snap = self.shedder.tick()
                 snap["t"] = now
                 snap["proc_q"] = self.shedder.expected_proc()
                 trace.append(snap)
                 if any(e[1] == EVT_ARRIVE for e in events):
                     push(now + self.control_period, EVT_CTRL, None)
-                counter += 1
 
         # queue eviction after push means kept_of may overstate: frames
         # evicted later were not actually processed. Reconstruct kept from

@@ -226,10 +226,11 @@ def test_offer_lane_mapping_and_limit():
 def test_session_state_is_pytree():
     st = SessionState.fresh(3, 10)
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == 12
+    assert len(leaves) == 15          # incl. the (C, K) queue lanes
     st2 = jax.tree_util.tree_map(lambda x: x, st)
     assert isinstance(st2, SessionState)
     assert st2.bg.shape == (3, 10)
+    assert st2.q_util.shape == st2.q_seq.shape == (3, 64)
 
 
 def test_session_checkpoint_roundtrip(tmp_path, rng):
