@@ -1,0 +1,167 @@
+"""Streaming-service benchmark: service-vs-simulator QoR/violations on
+one trace, and the service layer's per-frame overhead vs raw
+``ShedSession.step()`` dispatch at C ∈ {1, 8, 32}.
+
+Part A (fidelity): the same seeded camera trace is served twice — by
+``PipelineSimulator`` (synthetic ``BackendProfile`` latency draws) and
+by ``ServeService`` under a virtual clock with a ``MockBackend`` of the
+same latency profile (the service *measures* those simulated durations
+through its transport loop). QoR, shed rate and deadline-violation
+counts must land in the same regime; both are reported.
+
+Part B (overhead): utility-only arrival streams at C ∈ {1, 8, 32} are
+pushed through the full service event loop (coalescer windows +
+deadline events + send queue + sender + control ticks, virtual clock)
+and through a bare loop of the same ``step(utilities=...)`` dispatch
+shapes + tick cadence. ``overhead_x`` = service wall time per frame /
+raw step wall time per frame — the cost of the service skin itself.
+Budget (documented in README): within 5x of the raw step loop at every
+C; measured ~2–3x on CPU (heap events + coalescer windows are
+per-frame Python, but the dispatches they feed are the same batched
+step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import Query, RED, open_session, overall_qor
+from repro.data.pipeline import camera_array_records, interleave_streams
+from repro.serve import (
+    Arrival,
+    BackendProfile,
+    MockBackend,
+    PipelineSimulator,
+    ServeService,
+    VirtualClock,
+    arrivals_from_records,
+)
+from benchmarks.common import FPS, Timer, dataset, records, train_model
+
+BENCH_SEED = 0
+
+
+@dataclass(frozen=True)
+class _Rec:
+    """Minimal frame payload for the overhead sweep."""
+    cam_id: int
+    frame_idx: int
+    t_gen: float
+    busy: bool
+
+
+def _fidelity(quick: bool) -> dict:
+    nvid, frames = (7, 120) if quick else (9, 300)
+    ncam = nvid - 3
+    streams = records(nvid, frames, ("red",))
+    train_recs = [r for s in streams[:3] for r in s]
+    model = train_model(train_recs, [RED])
+    train_us = [float(model.score(r.pf)) for r in train_recs]
+    scs = dataset(nvid, frames)
+    cam_streams = camera_array_records(scs[3:], [RED], model=model, fps=FPS)
+    recs = interleave_streams(cam_streams)
+    us = [r.utility for r in recs]
+    query = Query.single(RED, latency_bound=1.0, fps=FPS)
+
+    sim_sess = open_session(query, num_cameras=ncam, model=model,
+                            train_utilities=train_us)
+    sim = PipelineSimulator(sim_sess, BackendProfile(), tokens=1,
+                            seed=BENCH_SEED, batch_arrivals=True)
+    sim_res = sim.run(recs, us)
+
+    svc_sess = open_session(query, num_cameras=ncam, model=model,
+                            train_utilities=train_us)
+    prof = BackendProfile()
+    svc = ServeService(
+        svc_sess,
+        MockBackend(prof.filter_latency, prof.dnn_latency, prof.jitter,
+                    seed=BENCH_SEED),
+        clock=VirtualClock(), tokens=1, max_batch=8, max_wait=0.05)
+    svc_res = svc.run(arrivals_from_records(recs, us))
+
+    return {
+        "qor_sim": overall_qor([r.objects for r in recs], sim_res.kept_mask),
+        "qor_service": overall_qor([r.objects for r in svc_res.offered],
+                                   svc_res.kept_mask),
+        "violations_sim": int(sim_res.violations),
+        "violations_service": int(svc_res.violations),
+        "shed_rate_sim": sim_res.stats["drop_rate"],
+        "shed_rate_service": svc_res.metrics["derived"]["shed_rate"],
+        "e2e_p99_service_ms":
+            svc_res.metrics["histograms"]["e2e.latency_s"]["p99"] * 1e3,
+    }
+
+
+def _overhead(ncam: int, n_ticks: int, per_tick: int = 1) -> dict:
+    """Per-frame wall time: full service event loop vs bare step loop,
+    identical (C, T) dispatch shapes and tick cadence."""
+    rng = np.random.default_rng(BENCH_SEED)
+    train_us = rng.random(2048).astype(np.float32)
+    query = Query.single(RED, latency_bound=1.0, fps=FPS)
+    T = 4                              # frames per camera per window
+    util = rng.random((n_ticks, ncam, T)).astype(np.float32)
+
+    def make_arrivals():
+        out = []
+        for i in range(n_ticks):
+            for t in range(T):
+                tt = (i * T + t) / FPS
+                for c in range(ncam):
+                    out.append(Arrival(t=tt, cam=c,
+                                       record=_Rec(c, i * T + t, tt, False),
+                                       utility=float(util[i, c, t])))
+        return out
+
+    def service_run():
+        sess = open_session(query, num_cameras=ncam,
+                            train_utilities=train_us)
+        svc = ServeService(sess, MockBackend(jitter=0.0, seed=BENCH_SEED),
+                           clock=VirtualClock(), tokens=1, max_batch=T,
+                           max_wait=(T - 0.5) / FPS)
+        svc.run(make_arrivals())
+
+    # ticks arrive at the simulated control cadence: one per
+    # control_period(0.5s)/frame-interval dispatches
+    tick_every = max(1, int(0.5 * FPS / T))
+
+    def step_run():
+        sess = open_session(query, num_cameras=ncam,
+                            train_utilities=train_us)
+        for i in range(n_ticks):
+            sess.step(utilities=util[i], tick=(i % tick_every == 0))
+            while sess.next_frame() is not None:
+                pass
+
+    service_run(); step_run()          # warm compiles / allocators
+    with Timer() as ts:
+        service_run()
+    with Timer() as tr:
+        step_run()
+    n_frames = n_ticks * ncam * T
+    return {
+        "cams": ncam,
+        "service_us_per_frame": ts.us / n_frames,
+        "step_us_per_frame": tr.us / n_frames,
+        "overhead_x": ts.us / max(tr.us, 1e-9),
+    }
+
+
+def run(quick=True):
+    fidelity = _fidelity(quick)
+    n_ticks = 40 if quick else 150
+    rows = [_overhead(c, n_ticks) for c in (1, 8, 32)]
+    derived = {
+        **{k: round(v, 4) if isinstance(v, float) else v
+           for k, v in fidelity.items()},
+        **{f"overhead_x_c{r['cams']}": round(r["overhead_x"], 2)
+           for r in rows},
+    }
+    return {"us_per_call": rows[1]["service_us_per_frame"],
+            "derived": derived,
+            "rows": rows, "fidelity": fidelity}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

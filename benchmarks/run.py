@@ -24,8 +24,27 @@ BENCHES = [
     ("fig13b_14_multicam", "benchmarks.bench_multicam"),
     ("fig15_overhead", "benchmarks.bench_overhead"),
     ("serve_step_fused", "benchmarks.bench_serve_step"),
+    ("service_streaming", "benchmarks.bench_service"),
     ("roofline_summary", "benchmarks.roofline"),
 ]
+
+# consolidated machine-readable results: per-bench name -> metrics
+# dict, merged across (possibly partial --only) runs so the perf
+# trajectory is tracked in one file across PRs instead of eyeballed
+# from stdout
+CONSOLIDATED = Path("BENCH_serve.json")
+
+
+def _write_consolidated(results: dict) -> None:
+    merged = {}
+    if CONSOLIDATED.exists():
+        try:
+            merged = json.loads(CONSOLIDATED.read_text())
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    merged.update(results)
+    CONSOLIDATED.write_text(
+        json.dumps(merged, indent=2, sort_keys=True) + "\n")
 
 
 def main() -> None:
@@ -46,6 +65,7 @@ def main() -> None:
     outdir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
+    consolidated = {}
     for name, mod_name in BENCHES:
         if args.only and not any(sub in name for sub in args.only):
             continue
@@ -54,12 +74,18 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
             res = mod.run(quick=not args.full)
             (outdir / f"{name}.json").write_text(json.dumps(res, indent=2))
+            consolidated[name] = {"us_per_call": res["us_per_call"],
+                                  "derived": res["derived"],
+                                  "mode": "full" if args.full else "quick"}
             derived = json.dumps(res["derived"], sort_keys=True)
             print(f'{name},{res["us_per_call"]:.1f},"{derived}"', flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
+            consolidated[name] = {"error": f"{type(e).__name__}: {e}"}
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if consolidated:
+        _write_consolidated(consolidated)
     if failures:
         raise SystemExit(1)
 

@@ -1,11 +1,14 @@
-"""Serve a real JAX model behind a multi-camera shedding session.
+"""Serve a real JAX model behind the streaming shedding service.
 
 The backend 'Application Query' is an actual jitted LM forward (the
-paper's EfficientDet slot); one ``ShedSession`` fronts the camera array
-(fused array scoring + per-camera admission), and the control loop
-keeps E2E latency bounded as ingress exceeds backend throughput.
+paper's EfficientDet slot) driven through the full service skin:
+per-camera arrivals are coalesced into fused ``(C, T, H, W, 3)``
+dispatches, admitted frames wait in the backpressured send queue, and
+the sender's *measured* per-frame wall times feed the Eq. 17–20
+control loop that keeps E2E latency bounded as ingress exceeds backend
+throughput. Prints the per-stage metrics report at the end.
 
-    PYTHONPATH=src python examples/serve_with_shedding.py --frames 300
+    PYTHONPATH=src python examples/serve_with_shedding.py --frames 120
 """
 import argparse
 import sys
@@ -13,13 +16,15 @@ import sys
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--frames", type=int, default=300)
+    ap.add_argument("--frames", type=int, default=120)
     ap.add_argument("--fps", type=float, default=30.0)
+    ap.add_argument("--cams", type=int, default=4)
     args = ap.parse_args()
 
     from repro.launch import serve as S
     sys.argv = [sys.argv[0], "--frames", str(args.frames),
-                "--fps", str(args.fps), "--real-backend"]
+                "--fps", str(args.fps), "--cams", str(args.cams),
+                "--real-backend"]
     S.main()
 
 

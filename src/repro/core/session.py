@@ -949,6 +949,11 @@ class ShedSession:
     def __len__(self) -> int:
         return int((np.asarray(self.state.q_seq) >= 0).sum())
 
+    def queue_depths(self) -> np.ndarray:
+        """Live per-camera send-queue depths, ``(C,)`` ints — the
+        serving layer's queue-depth observability hook."""
+        return (np.asarray(self.state.q_seq) >= 0).sum(axis=1)
+
     def observed_drop_rate(self, cam: int = 0) -> float:
         """Fraction of camera ``cam``'s history below its threshold."""
         st = self.state

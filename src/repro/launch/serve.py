@@ -1,21 +1,27 @@
-"""Serving launcher: utility-aware load shedding in front of a real
-JAX backend (the paper's architecture with an LM / detector backend).
+"""Serving launcher: the streaming load-shedding service end to end.
 
-One multi-camera ``ShedSession`` fronts the whole camera array: the
-test cameras are scored as a ``(C, T, H, W, 3)`` stack with ONE fused
-device dispatch per batch (per-camera background-state lanes), and the
-same session runs vectorized per-camera admission + queues in the
-simulator. Each admitted frame triggers one backend inference whose
-measured wall time feeds the control loop — exactly the paper's
-token-backpressure arrangement, with the Backend Query Executor
-replaced by a jitted model step.
+One multi-camera ``ShedSession`` fronts the camera array behind the
+full service skin (``repro.serve.service``): timed per-camera arrivals
+are coalesced into ``(C, T, H, W, 3)`` windows and scored + admitted in
+ONE fused dispatch per flush, admitted frames wait in the backpressured
+send queue, and a token-gated sender drives the backend — a seeded mock
+of the paper's filter/DNN split by default, or a real jitted LM forward
+with ``--real-backend``. Every completion feeds the frame's *measured*
+latency into the Eq. 17–20 control loop, and per-stage metrics (ingest
+fps, shed rate, coalescer wait, queue depth, backend utilization,
+p50/p95/p99 E2E latency, deadline violations) are exported as JSON/CSV.
 
-  PYTHONPATH=src python -m repro.launch.serve --frames 600 --fps 30
+The replay is paced by a virtual clock by default (deterministic given
+``--seed``, runs as fast as the host allows); ``--wall-clock`` paces it
+in real time, which is the service's production default.
+
+  PYTHONPATH=src python -m repro.launch.serve --cams 8 --frames 300
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -23,16 +29,28 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import RED, Query, open_session, overall_qor
-from repro.data.pipeline import camera_array_records, interleave_streams, \
-    scenario_records
+from repro.data.pipeline import camera_array_records, scenario_records
 from repro.data.synthetic import generate_dataset
 from repro.models import lm_specs, lm_forward
-from repro.serve.simulator import BackendProfile, PipelineSimulator
+from repro.serve import (
+    Arrival,
+    MockBackend,
+    ServeService,
+    VirtualClock,
+    WallClock,
+)
 from repro.sharding.api import materialize
 
 
-def make_lm_backend(arch: str = "smollm-135m", seq: int = 64):
-    """A real jitted model forward as the expensive DNN stage."""
+def make_lm_backend(arch: str = "smollm-135m", seq: int = 64,
+                    pad: float = 0.0):
+    """A real jitted model forward as the expensive DNN stage.
+
+    Returns an ``item -> measured_latency_seconds`` callable (wrapped
+    as a Backend by the service). ``pad`` adds a fixed per-frame
+    overhead on top of the measured wall time — off by default so the
+    control loop sees exactly what the backend costs.
+    """
     cfg = get_smoke_config(arch)
     params = materialize(lm_specs(cfg), jax.random.key(0))
     fwd = jax.jit(lambda p, b: lm_forward(cfg, p, b)[0])
@@ -40,27 +58,50 @@ def make_lm_backend(arch: str = "smollm-135m", seq: int = 64):
     fwd(params, {"tokens": toks}).block_until_ready()      # warmup
     def backend(frame) -> float:
         t0 = time.perf_counter()
-        if frame.busy:                                     # DNN stage
+        if getattr(frame, "busy", True):                   # DNN stage
             fwd(params, {"tokens": toks}).block_until_ready()
-        return time.perf_counter() - t0 + 0.001
+        return time.perf_counter() - t0 + pad
     return backend
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--frames", type=int, default=600)
+    ap.add_argument("--cams", type=int, default=8)
+    ap.add_argument("--frames", type=int, default=300)
     ap.add_argument("--fps", type=float, default=30.0)
-    ap.add_argument("--cams", type=int, default=2)
     ap.add_argument("--latency-bound", type=float, default=0.5)
-    ap.add_argument("--real-backend", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for scenario generation and backend jitter")
+    ap.add_argument("--tokens", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="coalescer per-camera window size")
+    ap.add_argument("--max-wait", type=float, default=0.05,
+                    help="coalescer deadline (seconds)")
+    ap.add_argument("--control-period", type=float, default=0.5)
+    ap.add_argument("--real-backend", action="store_true",
+                    help="jitted-LM backend (measured wall time) instead "
+                         "of the seeded mock")
+    ap.add_argument("--backend-jitter", type=float, default=0.05,
+                    help="mock backend multiplicative latency noise")
+    ap.add_argument("--backend-pad", type=float, default=0.0,
+                    help="fixed per-frame pad added to the LM backend's "
+                         "measured latency")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="pace the replay in real time (the production "
+                         "clock) instead of the deterministic virtual one")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="serve precomputed utilities via offer_batch "
+                         "instead of raw frames via the fused step")
+    ap.add_argument("--metrics-out", default="results/serve/metrics.json",
+                    help="metrics JSON path (a .csv lands next to it)")
     args = ap.parse_args()
 
     h, w = 48, 80
     query = Query.single(RED, latency_bound=args.latency_bound, fps=args.fps)
 
     print("generating scenarios...")
-    scs = generate_dataset(range(args.cams + 3), num_frames=args.frames,
-                           height=h, width=w)
+    scs = generate_dataset(range(args.seed, args.seed + args.cams + 3),
+                           num_frames=args.frames, height=h, width=w)
     train, test = scs[:3], scs[3:]
 
     # one session fronts the whole camera array; fit() trains the query's
@@ -72,23 +113,49 @@ def main():
     model = session.fit(np.stack([r.pf for r in train_recs]),
                         np.array([r.label for r in train_recs]))
 
-    # score the C test cameras in ONE fused dispatch per batch; records
-    # arrive with in-pipeline utilities
+    # the camera streams as timed arrivals; with the fused path the raw
+    # RGB frames ride along and the service session scores them
+    # in-dispatch (one fused step per coalesced window)
     streams = camera_array_records(test, list(query.colors), model=model,
                                    fps=args.fps)
-    recs = interleave_streams(streams)
-    us = [r.utility for r in recs]
+    arrivals = []
+    for c, stream in enumerate(streams):
+        rgb = None if args.no_fused else test[c].frames_rgb()
+        for t, r in enumerate(stream):
+            arrivals.append(Arrival(
+                t=r.t_gen, cam=r.cam_id, record=r, utility=float(r.utility),
+                frame=None if rgb is None else rgb[t]))
+    arrivals.sort(key=lambda a: a.t)
 
-    backend_fn = make_lm_backend() if args.real_backend else None
-    sim = PipelineSimulator(session, BackendProfile(), tokens=1,
-                            backend_fn=backend_fn)
-    res = sim.run(recs, us)
-    objs = [r.objects for r in recs]
+    backend = (make_lm_backend(pad=args.backend_pad) if args.real_backend
+               else MockBackend(jitter=args.backend_jitter, seed=args.seed))
+    clock = WallClock() if args.wall_clock else VirtualClock()
+    service = ServeService(session, backend, clock=clock,
+                           tokens=args.tokens, max_batch=args.max_batch,
+                           max_wait=args.max_wait,
+                           control_period=args.control_period)
+    mode = "fused-step" if not args.no_fused else "offer_batch"
+    print(f"serving {len(arrivals)} frames from {args.cams} cameras "
+          f"({mode}, {'wall' if args.wall_clock else 'virtual'} clock)...")
+    res = service.run(arrivals)
+
+    objs = [r.objects for r in res.offered]
     lat = res.e2e_latencies()
-    print(f"offered={res.stats['offered']} processed={res.stats['processed']} "
-          f"drop_rate={res.stats['drop_rate']:.2f}")
-    print(f"QoR={overall_qor(objs, res.kept_mask):.3f} violations={res.violations} "
-          f"p50={np.percentile(lat, 50)*1e3:.0f}ms p99={np.percentile(lat, 99)*1e3:.0f}ms")
+    d = res.metrics["derived"]
+    print(f"offered={d['offered']} processed={d['processed']} "
+          f"shed_rate={d['shed_rate']:.2f} "
+          f"backend_util={d['backend_utilization']:.2f}")
+    print(f"QoR={overall_qor(objs, res.kept_mask):.3f} "
+          f"violations={res.violations} "
+          f"(rate {d['violation_rate']:.3f}) "
+          f"p50={np.percentile(lat, 50)*1e3:.0f}ms "
+          f"p99={np.percentile(lat, 99)*1e3:.0f}ms")
+    out = Path(args.metrics_out)
+    service.metrics.to_json(out)
+    service.metrics.to_csv(out.with_suffix(".csv"))
+    print(f"metrics -> {out} / {out.with_suffix('.csv')}")
+    print()
+    print(service.metrics.report("service metrics"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+# Serving layer: the offline discrete-event simulator (synthetic
+# backend latencies) and the streaming service (async ingest
+# coalescing, backpressured transport, measured backend latencies,
+# per-stage metrics). Both drive the same ShedSession serving surface,
+# so QoR/violation results are directly comparable.
+from repro.serve.clock import Clock, VirtualClock, WallClock
+from repro.serve.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.serve.service import (
+    Arrival,
+    IngestCoalescer,
+    ServeService,
+    ServiceResult,
+    ServedFrame,
+    arrivals_from_records,
+)
+from repro.serve.simulator import (
+    BackendProfile,
+    PipelineSimulator,
+    ProcessedFrame,
+    SimResult,
+)
+from repro.serve.transport import (
+    Backend,
+    CallableBackend,
+    MockBackend,
+    SenderWorker,
+    as_backend,
+)
+
+__all__ = [
+    "Arrival", "Backend", "BackendProfile", "CallableBackend", "Clock",
+    "Counter", "Gauge", "Histogram", "IngestCoalescer", "MetricsRegistry",
+    "MockBackend", "PipelineSimulator", "ProcessedFrame", "SenderWorker",
+    "ServeService", "ServiceResult", "ServedFrame", "SimResult",
+    "VirtualClock", "WallClock", "arrivals_from_records", "as_backend",
+]

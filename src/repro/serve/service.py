@@ -1,0 +1,417 @@
+"""The streaming serve service: async ingest -> session -> send queue ->
+sender -> backend, with per-stage metrics (paper Fig. 8 as a *service*,
+not an offline array sweep).
+
+Components, one per stage:
+
+``IngestCoalescer``
+    Accepts per-camera frame arrivals and windows them into one
+    dispatch per flush. A window flushes when any camera accumulates
+    ``max_batch`` frames or when ``max_wait`` elapses since the window
+    opened (deadline flush — partially-filled windows still ship, so
+    coalescing never adds more than ``max_wait`` to E2E latency).
+
+``ServeService``
+    The event-driven runtime tying the stages together. A flushed
+    window dispatches to the session by the richest path available:
+    a full rectangular window of raw frames goes through
+    ``ShedSession.step(frames=...)`` (scoring + admission + queues in
+    ONE fused dispatch); ragged or score-only windows go through
+    ``offer_batch``; shedders without ``offer_batch`` (e.g. a bare
+    ``LoadShedder``) fall back to sequential ``offer``. Admitted frames
+    wait in the session's bounded utility queues (the backpressured
+    send queue) until the ``SenderWorker`` drains them per backend
+    token; every completion feeds the frame's *measured* latency into
+    ``report_backend_latency``, closing the Eq. 16–20 control loop with
+    real numbers. Control ticks re-derive thresholds/queue caps every
+    ``control_period`` seconds from the observed ingress rate.
+
+All time comes from an injectable :class:`~repro.serve.clock.Clock` —
+``WallClock`` (production default) or ``VirtualClock`` (deterministic
+tests/benchmarks: identical decisions, timestamps and metrics on every
+seeded run). The runtime is a single-threaded event loop over a time
+heap (ARRIVE < DONE < FLUSH < CTRL at equal timestamps), so there is no
+scheduler nondeterminism to control for.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.control import LatencyInputs
+from repro.serve.clock import Clock, VirtualClock, WallClock
+from repro.serve.metrics import MetricsRegistry
+from repro.serve.transport import SenderWorker, SendOutcome
+
+# event kinds — the tuple ordering makes same-instant processing
+# deterministic: arrivals land in the window before its deadline fires,
+# completions free tokens before control re-derives thresholds
+EVT_ARRIVE, EVT_DONE, EVT_FLUSH, EVT_CTRL = 0, 1, 2, 3
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One frame reaching the service at time ``t``.
+
+    ``record`` is the frame payload handed to the backend (anything;
+    ``t_gen``/``busy`` attributes are used when present). ``utility``
+    is the precomputed score (camera-side ingest); ``frame`` is the raw
+    ``(H, W, 3)`` RGB array for in-dispatch scoring. At least one of
+    the two must be present.
+    """
+    t: float
+    cam: Any
+    record: Any
+    utility: Optional[float] = None
+    frame: Optional[np.ndarray] = None
+
+
+def arrivals_from_records(records: Sequence[Any],
+                          utilities: Optional[Sequence[float]] = None,
+                          latency_inputs: Optional[LatencyInputs] = None,
+                          frames: Optional[Sequence[np.ndarray]] = None,
+                          ) -> List[Arrival]:
+    """FrameRecords -> timed arrivals (generation time plus the camera
+    processing + camera->shedder network delays, exactly the
+    ``PipelineSimulator`` arrival model, so service and simulator runs
+    on one trace are comparable)."""
+    li = latency_inputs or LatencyInputs()
+    out = []
+    for i, r in enumerate(records):
+        u = (float(utilities[i]) if utilities is not None
+             else (None if np.isnan(getattr(r, "utility", float("nan")))
+                   else float(r.utility)))
+        out.append(Arrival(
+            t=r.t_gen + li.proc_cam + li.net_cam_ls, cam=r.cam_id, record=r,
+            utility=u, frame=None if frames is None else frames[i]))
+    out.sort(key=lambda a: a.t)
+    return out
+
+
+@dataclass
+class _Entry:
+    record: Any
+    utility: Optional[float]
+    frame: Optional[np.ndarray]
+
+
+@dataclass
+class CoalescedBatch:
+    """One flushed ingest window: per-camera-lane entry lists."""
+    per_cam: List[List[_Entry]]
+    opened_at: float
+    count: int
+
+    @property
+    def rectangular(self) -> bool:
+        """Every lane populated with the same number of frames."""
+        n = len(self.per_cam[0])
+        return n > 0 and all(len(l) == n for l in self.per_cam)
+
+    @property
+    def has_frames(self) -> bool:
+        return all(e.frame is not None for l in self.per_cam for e in l)
+
+
+class IngestCoalescer:
+    """Windows per-camera arrivals into batched dispatches.
+
+    ``add`` returns True when the window just became full (any lane hit
+    ``max_batch``) and should flush immediately; otherwise the service
+    flushes it at the ``max_wait`` deadline scheduled when the window
+    opened.
+    """
+
+    def __init__(self, num_cameras: int, *, max_batch: int = 8,
+                 max_wait: float = 0.05,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.num_cameras = int(num_cameras)
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.pending: List[List[_Entry]] = [[] for _ in range(num_cameras)]
+        self.count = 0
+        self.opened_at: Optional[float] = None
+
+    def add(self, lane: int, record: Any, utility: Optional[float],
+            frame: Optional[np.ndarray], now: float) -> bool:
+        if self.count == 0:
+            self.opened_at = now
+        self.pending[lane].append(_Entry(record, utility, frame))
+        self.count += 1
+        self.metrics.gauge("coalescer.depth").set(self.count)
+        return len(self.pending[lane]) >= self.max_batch
+
+    def flush(self, now: float) -> Optional[CoalescedBatch]:
+        if self.count == 0:
+            return None
+        m = self.metrics
+        m.histogram("coalescer.batch_frames").observe(self.count)
+        m.histogram("coalescer.wait_s").observe(now - self.opened_at)
+        batch = CoalescedBatch(self.pending, self.opened_at, self.count)
+        self.pending = [[] for _ in range(self.num_cameras)]
+        self.count = 0
+        self.opened_at = None
+        m.gauge("coalescer.depth").set(0)
+        return batch
+
+
+@dataclass(frozen=True)
+class ServedFrame:
+    """One frame that completed backend processing."""
+    record: Any
+    t_sent: float
+    t_done: float
+    backend_latency: float   # the measured per-frame latency (Eq. 16 q)
+    e2e: float               # t_done - record.t_gen
+
+
+@dataclass
+class ServiceResult:
+    processed: List[ServedFrame]
+    offered: List[Any]
+    kept_mask: List[bool]
+    violations: int
+    metrics: Dict[str, Any]          # MetricsRegistry.snapshot()
+    trace: List[dict] = field(default_factory=list)
+
+    def e2e_latencies(self) -> np.ndarray:
+        return np.asarray([p.e2e for p in self.processed])
+
+
+class ServeService:
+    """The streaming load-shedding service fronting one camera array.
+
+    ``run(arrivals)`` replays (virtual clock) or live-paces (wall
+    clock) a timed arrival sequence through coalescer -> session ->
+    send queue -> sender -> backend and returns a
+    :class:`ServiceResult` whose stats line up field-for-field with
+    ``PipelineSimulator`` results for A/B comparison.
+    """
+
+    def __init__(self, session: Any, backend: Any, *,
+                 clock: Optional[Clock] = None,
+                 tokens: int = 1,
+                 max_batch: int = 8,
+                 max_wait: float = 0.05,
+                 control_period: float = 0.5,
+                 fps_window: float = 2.0,
+                 expire_in_queue: bool = True,
+                 latency_inputs: Optional[LatencyInputs] = None,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
+        self.session = session
+        self.clock: Clock = clock if clock is not None else WallClock()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.num_cameras = int(getattr(session, "num_cameras", 1))
+        self.control_period = float(control_period)
+        self.fps_window = float(fps_window)
+        self.tokens = int(tokens)
+        self.li = latency_inputs or getattr(
+            session, "latency_inputs", None) or LatencyInputs()
+        self.coalescer = IngestCoalescer(
+            self.num_cameras, max_batch=max_batch, max_wait=max_wait,
+            metrics=self.metrics)
+        self.sender = SenderWorker(
+            session, backend, tokens=tokens, latency_inputs=self.li,
+            expire_in_queue=expire_in_queue, metrics=self.metrics)
+        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, int, Any]] = []
+        self._epoch = 0
+
+    # -- lane mapping --------------------------------------------------------
+
+    def _lane(self, cam: Any) -> int:
+        lane_fn = getattr(self.session, "lane", None)
+        if lane_fn is not None:
+            return lane_fn(cam)
+        return 0                       # single-queue shedder (LoadShedder)
+
+    # -- event plumbing ------------------------------------------------------
+
+    def _push(self, t: float, kind: int, payload: Any) -> None:
+        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+
+    # -- stages --------------------------------------------------------------
+
+    def _on_arrive(self, now: float, a: Arrival) -> None:
+        self.metrics.counter("ingest.arrivals").inc()
+        self._arrival_times.append(now)
+        was_empty = self.coalescer.count == 0
+        full = self.coalescer.add(
+            self._lane(a.cam), a.record, a.utility, a.frame, now)
+        if was_empty:
+            self._epoch += 1
+            self._push(now + self.coalescer.max_wait, EVT_FLUSH, self._epoch)
+        if full:
+            self._flush(now)
+
+    def _flush(self, now: float) -> None:
+        batch = self.coalescer.flush(now)
+        self._epoch += 1               # invalidate any pending deadline
+        if batch is not None:
+            self._dispatch(batch)
+            self._pump(now)
+
+    def _dispatch(self, batch: CoalescedBatch) -> None:
+        """Hand one coalesced window to the shedder by the richest
+        available path: fused step > offer_batch > sequential offer."""
+        m, sess = self.metrics, self.session
+        d0 = sess.stats.dropped_admission
+        q0 = sess.stats.dropped_queue
+        if (batch.rectangular and batch.has_frames
+                and getattr(sess, "step", None) is not None
+                and getattr(sess, "model", None) is not None):
+            frames = np.stack([np.stack([e.frame for e in l])
+                               for l in batch.per_cam])
+            items = [[e.record for e in l] for l in batch.per_cam]
+            sess.step(frames=frames, items=items, tick=False)
+            m.counter("dispatch.fused").inc()
+        else:
+            recs, utils = [], []
+            for lane in batch.per_cam:
+                for e in lane:
+                    if e.utility is None:
+                        raise ValueError(
+                            "arrival without a utility can only be served "
+                            "through the fused path (rectangular window of "
+                            "raw frames + a trained model)")
+                    recs.append(e.record)
+                    utils.append(e.utility)
+            offer_batch = getattr(sess, "offer_batch", None)
+            if offer_batch is not None and len(recs) > 1:
+                offer_batch(recs, utils)
+                m.counter("dispatch.batched").inc()
+            else:
+                for r, u in zip(recs, utils):
+                    sess.offer(r, u)
+                m.counter("dispatch.sequential").inc(len(recs))
+        for lane in batch.per_cam:
+            for e in lane:
+                self._offered.append(e.record)
+        m.counter("ingest.offered").inc(batch.count)
+        m.counter("shed.admission").inc(sess.stats.dropped_admission - d0)
+        m.counter("shed.queue").inc(sess.stats.dropped_queue - q0)
+        self._observe_queue_depth()
+
+    def _pump(self, now: float) -> None:
+        for o in self.sender.pump(now):
+            self._push(o.t_done, EVT_DONE, o)
+
+    def _on_done(self, now: float, o: SendOutcome) -> None:
+        self.sender.complete()
+        t_gen = getattr(o.item, "t_gen", o.t_sent)
+        e2e = now - t_gen
+        self._processed.append(ServedFrame(o.item, o.t_sent, now,
+                                           o.latency, e2e))
+        m = self.metrics
+        m.counter("backend.done").inc()
+        m.histogram("e2e.latency_s").observe(e2e)
+        if e2e > self.session.latency_bound:
+            m.counter("e2e.violations").inc()
+        # the loop-closing feed: the MEASURED latency, not a model
+        self.session.report_backend_latency(o.latency)
+        self._pump(now)
+
+    def _on_control(self, now: float) -> None:
+        cutoff = now - self.fps_window
+        self._arrival_times[:] = [t for t in self._arrival_times
+                                  if t >= cutoff]
+        if self._arrival_times:
+            self.session.report_ingress_fps(
+                len(self._arrival_times) / self.fps_window)
+        snap = self.session.tick()
+        snap["t"] = now
+        snap["proc_q"] = self.session.expected_proc()
+        snap["queue_depth"] = self._observe_queue_depth()
+        self._trace.append(snap)
+        m = self.metrics
+        m.gauge("control.target_drop_rate").set(snap["target_drop_rate"])
+        th = snap["threshold"]
+        if np.isfinite(th):
+            m.gauge("control.threshold").set(th)
+        pending = (self.coalescer.count > 0
+                   or self.sender.free < self.sender.tokens
+                   or any(k != EVT_CTRL for _, k, _, _ in self._heap))
+        if pending:
+            self._push(now + self.control_period, EVT_CTRL, None)
+
+    def _observe_queue_depth(self) -> int:
+        depths = getattr(self.session, "queue_depths", None)
+        depth = (int(np.sum(depths())) if depths is not None
+                 else len(self.session))
+        self.metrics.gauge("queue.depth").set(depth)
+        self.metrics.histogram("queue.depth").observe(depth)
+        return depth
+
+    # -- the runtime ---------------------------------------------------------
+
+    def run(self, arrivals: Iterable[Arrival]) -> ServiceResult:
+        self._heap = []
+        self._seq = itertools.count()
+        self._arrival_times: List[float] = []
+        self._offered: List[Any] = []
+        self._processed: List[ServedFrame] = []
+        self._trace: List[dict] = []
+        self._epoch = 0
+        stats0 = (self.session.stats.offered,
+                  self.session.stats.dropped_admission,
+                  self.session.stats.dropped_queue,
+                  self.session.stats.sent)
+        for a in arrivals:
+            self._push(a.t, EVT_ARRIVE, a)
+        if not self._heap:
+            return ServiceResult([], [], [], 0, self.metrics.snapshot(), [])
+        t_start = self._heap[0][0]
+        self.clock.sleep_until(t_start)
+        self._push(t_start + self.control_period, EVT_CTRL, None)
+        while self._heap:
+            t, kind, _, payload = heapq.heappop(self._heap)
+            self.clock.sleep_until(t)
+            now = self.clock.now()
+            if kind == EVT_ARRIVE:
+                self._on_arrive(now, payload)
+            elif kind == EVT_DONE:
+                self._on_done(now, payload)
+            elif kind == EVT_FLUSH:
+                if payload == self._epoch:
+                    self._flush(now)
+            else:
+                self._on_control(now)
+        return self._finalize(t_start, stats0)
+
+    def _finalize(self, t_start: float,
+                  stats0: Tuple[int, int, int, int]) -> ServiceResult:
+        processed_ids = {id(p.record) for p in self._processed}
+        kept_mask = [id(r) in processed_ids for r in self._offered]
+        lb = self.session.latency_bound
+        violations = sum(1 for p in self._processed if p.e2e > lb)
+        m = self.metrics
+        elapsed = max(self.clock.now() - t_start, 1e-9)
+        n_off = len(self._offered)
+        n_proc = len(self._processed)
+        st = self.session.stats
+        m.derived.update({
+            "elapsed_s": elapsed,
+            "ingest_fps": m.counter("ingest.arrivals").value / elapsed,
+            "offered": n_off,
+            "processed": n_proc,
+            "shed_rate": 1.0 - n_proc / max(1, n_off),
+            "shed_admission_rate":
+                (st.dropped_admission - stats0[1]) / max(1, n_off),
+            "violation_rate": violations / max(1, n_proc),
+            "backend_utilization":
+                m.counter("backend.busy_s").value / (elapsed * self.tokens),
+        })
+        return ServiceResult(self._processed, self._offered, kept_mask,
+                             violations, m.snapshot(), self._trace)
+
+
+__all__ = ["Arrival", "CoalescedBatch", "IngestCoalescer", "ServeService",
+           "ServiceResult", "ServedFrame", "arrivals_from_records",
+           "EVT_ARRIVE", "EVT_DONE", "EVT_FLUSH", "EVT_CTRL"]

@@ -21,6 +21,15 @@ best frame (closer to the paper's best-first transmission intent).
 The backend is pluggable: a latency model (deterministic, matching the
 paper's filter-vs-DNN split) or a real JAX model step. Deterministic
 given seeds, so control-loop experiments are reproducible.
+
+Latencies here are **synthetic**: ``BackendProfile`` *draws* each
+frame's processing time from a seeded model (or ``backend_fn`` computes
+it), and the control loop is fed those draws. The streaming service
+(``repro.serve.service``) is the complement: the same session surface
+driven by wall-clock arrivals with **measured** backend latencies
+closing the Eq. 16 loop. Use the simulator for fast, exactly
+repeatable control-loop studies; use the service to validate against
+real backend timing.
 """
 from __future__ import annotations
 
@@ -85,7 +94,8 @@ class PipelineSimulator:
                  seed: int = 0,
                  backend_fn: Optional[Callable[[FrameRecord], float]] = None,
                  fps_window: float = 2.0,
-                 batch_arrivals: bool = False):
+                 batch_arrivals: bool = False,
+                 rng: Optional[np.random.Generator] = None):
         self.shedder = shedder
         self.backend = backend
         self.backend_fn = backend_fn
@@ -102,7 +112,11 @@ class PipelineSimulator:
         # pick the tick's best frame instead of its first when a backend
         # token is free; shedders without offer_batch fall back
         self.batch_arrivals = bool(batch_arrivals)
-        self.rng = np.random.default_rng(seed)
+        # the generator behind every synthetic BackendProfile latency
+        # draw — pass rng= to share/control the stream explicitly,
+        # else it is freshly seeded from seed= (never module-global
+        # state, so runs are reproducible either way)
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
 
     def run(self, frames: Sequence[FrameRecord],
             utilities: Sequence[float]) -> SimResult:

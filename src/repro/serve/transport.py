@@ -1,0 +1,161 @@
+"""Backpressured transport: the sender worker and pluggable backends.
+
+The paper's transmission control (§IV-D): admitted frames wait in the
+session's bounded utility-ordered queues (the *send queue* — eviction
+under overload IS the backpressure), and a sender drains ``next_frame``
+one frame per free backend token. Each send produces a **measured**
+per-frame latency that the service feeds back through
+``report_backend_latency`` — the Eq. 17–20 control loop then runs on
+real numbers, not the simulator's synthetic draws.
+
+Backends implement ``process(item) -> latency_seconds``:
+
+``MockBackend``
+    Simulates the paper's filter-vs-DNN split (cheap exit for frames
+    without a large target blob) with seeded jitter; it does *not*
+    sleep — the returned latency is the simulated duration, and the
+    service runtime realizes it as a completion event (virtual clock:
+    instantly; wall clock: by waiting). Fully deterministic per seed.
+
+``CallableBackend``
+    Adapts a plain ``item -> latency`` callable — e.g. the jitted-LM
+    backend from ``repro.launch.serve.make_lm_backend``, which blocks
+    for real and returns its measured wall time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.control import LatencyInputs
+from repro.serve.metrics import MetricsRegistry
+
+MIN_LATENCY = 1e-6
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """One backend slot: process a frame, return its latency (seconds).
+
+    Non-blocking backends return a *simulated* duration; blocking
+    backends do the work inline and return the *measured* duration.
+    Either way the service schedules completion at ``t_sent + latency``
+    (for a blocking backend that instant has already passed, so the
+    completion fires immediately).
+    """
+
+    def process(self, item: Any) -> float: ...
+
+
+class MockBackend:
+    """Configurable-latency mock of the Backend Query Executor."""
+
+    def __init__(self, filter_latency: float = 0.004,
+                 dnn_latency: float = 0.150, jitter: float = 0.05,
+                 seed: int = 0,
+                 rng: Optional[np.random.Generator] = None) -> None:
+        self.filter_latency = float(filter_latency)
+        self.dnn_latency = float(dnn_latency)
+        self.jitter = float(jitter)
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+
+    def process(self, item: Any) -> float:
+        busy = bool(getattr(item, "busy", True))
+        base = self.dnn_latency if busy else self.filter_latency
+        noise = (self.jitter * self.rng.standard_normal()
+                 if self.jitter else 0.0)
+        return max(base * (1.0 + noise), MIN_LATENCY)
+
+
+class CallableBackend:
+    """Wrap an ``item -> latency_seconds`` callable as a Backend."""
+
+    def __init__(self, fn: Callable[[Any], float]) -> None:
+        self.fn = fn
+
+    def process(self, item: Any) -> float:
+        return max(float(self.fn(item)), MIN_LATENCY)
+
+
+def as_backend(b: Any) -> Backend:
+    if isinstance(b, Backend):
+        return b
+    if callable(b):
+        return CallableBackend(b)
+    raise TypeError(f"not a backend: {b!r}")
+
+
+@dataclass(frozen=True)
+class SendOutcome:
+    """One frame handed to the backend this pump."""
+    item: Any
+    t_sent: float
+    latency: float     # measured (blocking) or simulated (mock) seconds
+    t_done: float      # t_sent + net_ls_q + latency
+
+
+class SenderWorker:
+    """Drains the session's send queue toward the backend, one frame per
+    free token (the paper's token backpressure).
+
+    ``pump(now)`` pops best-first while tokens are free, sheds frames
+    that can no longer meet the E2E bound (Eq. 20 intent — don't burn a
+    token on a frame that already missed), runs the backend, and
+    returns the batch of :class:`SendOutcome`s for the runtime to
+    realize as completion events. ``complete()`` returns a token when a
+    completion fires. Mirrors ``PipelineSimulator``'s send loop
+    bookkeeping exactly (expired pops revert the ``sent`` count and
+    count as queue drops) so service and simulator stats compare 1:1.
+    """
+
+    def __init__(self, session: Any, backend: Any, *, tokens: int = 1,
+                 latency_inputs: Optional[LatencyInputs] = None,
+                 expire_in_queue: bool = True,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
+        if tokens < 1:
+            raise ValueError("tokens must be >= 1")
+        self.session = session
+        self.backend = as_backend(backend)
+        self.tokens = int(tokens)
+        self.free = int(tokens)
+        self.li = latency_inputs or getattr(
+            session, "latency_inputs", None) or LatencyInputs()
+        self.expire_in_queue = bool(expire_in_queue)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+
+    def pump(self, now: float) -> List[SendOutcome]:
+        out: List[SendOutcome] = []
+        m = self.metrics
+        while self.free > 0:
+            item = self.session.next_frame()
+            if item is None:
+                break
+            t_gen = getattr(item, "t_gen", None)
+            if self.expire_in_queue and t_gen is not None:
+                exp_done = (now + self.li.net_ls_q
+                            + self.session.expected_proc())
+                if exp_done - t_gen > self.session.latency_bound:
+                    # already doomed: a queue shed, not a send
+                    self.session.stats.dropped_queue += 1
+                    self.session.stats.sent -= 1
+                    m.counter("sender.expired").inc()
+                    continue
+            self.free -= 1
+            lat = max(float(self.backend.process(item)), MIN_LATENCY)
+            t_done = now + self.li.net_ls_q + lat
+            out.append(SendOutcome(item, now, lat, t_done))
+            m.counter("sender.sent").inc()
+            m.counter("backend.busy_s").inc(lat)
+            m.histogram("backend.latency_s").observe(lat)
+        return out
+
+    def complete(self) -> None:
+        self.free += 1
+        if self.free > self.tokens:
+            raise RuntimeError("more completions than sends")
+
+
+__all__ = ["Backend", "CallableBackend", "MockBackend", "SendOutcome",
+           "SenderWorker", "as_backend", "MIN_LATENCY"]

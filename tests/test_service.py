@@ -1,0 +1,304 @@
+"""Streaming serve service: coalescer windows, backpressured
+transport, measured-latency control feed, metrics, determinism.
+
+Everything runs under the virtual clock — the determinism contract is
+that a seeded run produces *identical* admission decisions and metrics
+snapshots on every repeat, so these tests are exact, not tolerance-y.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+
+from repro.core import Query, RED, open_session
+from repro.serve import (
+    Arrival,
+    MockBackend,
+    ServeService,
+    VirtualClock,
+    WallClock,
+    arrivals_from_records,
+)
+from repro.serve.metrics import MetricsRegistry
+
+FPS = 10.0
+
+
+@dataclass(frozen=True)
+class Rec:
+    cam_id: int
+    frame_idx: int
+    t_gen: float
+    busy: bool = False
+
+
+def _session(C=2, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return open_session(
+        Query.single(RED, latency_bound=1.0, fps=FPS), num_cameras=C,
+        train_utilities=rng.random(512).astype(np.float32), **kw)
+
+
+def _arrivals(C=2, n=60, seed=0, fps=FPS):
+    """n ticks of C synchronized cameras with seeded utilities."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        t = i / fps
+        for c in range(C):
+            out.append(Arrival(t=t, cam=c, record=Rec(c, i, t),
+                               utility=float(rng.random())))
+    return out
+
+
+def _service(sess, *, backend=None, **kw):
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait", 0.05)
+    return ServeService(sess, backend or MockBackend(seed=0), **kw)
+
+
+# -- clocks ------------------------------------------------------------------
+
+def test_virtual_clock_monotonic():
+    c = VirtualClock()
+    c.sleep_until(2.0)
+    assert c.now() == 2.0
+    c.sleep_until(1.0)                  # time never moves backwards
+    assert c.now() == 2.0
+    assert c.advance(0.5) == 2.5
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_wall_clock_starts_near_zero():
+    c = WallClock()
+    t = c.now()
+    assert 0.0 <= t < 1.0
+    c.sleep_until(t)                    # no-op past deadline
+
+
+# -- determinism (acceptance criterion) --------------------------------------
+
+def test_seeded_run_is_deterministic():
+    runs = []
+    for _ in range(2):
+        svc = _service(_session(C=2))
+        res = svc.run(_arrivals(C=2, n=60))
+        runs.append((res.kept_mask,
+                     json.dumps(res.metrics, sort_keys=True),
+                     [(p.record.cam_id, p.record.frame_idx,
+                       p.t_sent, p.t_done, p.backend_latency)
+                      for p in res.processed]))
+    assert runs[0][0] == runs[1][0]     # identical admission decisions
+    assert runs[0][1] == runs[1][1]     # identical metrics snapshot
+    assert runs[0][2] == runs[1][2]     # identical send/complete timeline
+
+
+# -- transport edge cases ----------------------------------------------------
+
+def test_send_queue_overflow_under_stalled_backend():
+    """A stalled backend (one token pinned for ~forever) leaves the
+    bounded send queue absorbing all admissions: it fills to its cap
+    and sheds by eviction instead of growing without bound."""
+    sess = _session(C=1, queue_size=8, queue_capacity=16)
+    svc = _service(sess, backend=MockBackend(
+        filter_latency=50.0, dnn_latency=50.0, jitter=0.0))
+    res = svc.run(_arrivals(C=1, n=100))
+    assert len(res.processed) <= 2      # first send + at most one more
+    assert sess.stats.dropped_queue > 0
+    depth = res.metrics["histograms"]["queue.depth"]
+    assert depth["max"] <= 16           # never exceeds the physical cap
+    assert res.metrics["counters"]["shed.queue"] > 0
+    # every offered frame is accounted: processed + still queued + shed
+    assert res.metrics["derived"]["shed_rate"] > 0.5
+
+
+def test_expired_frames_shed_at_pop():
+    """Frames that can no longer meet the E2E bound are shed when
+    popped (Eq. 20 intent), not sent — they burn no backend token."""
+    sess = _session(C=1)
+    # DNN latency near the bound: while one frame processes, queued
+    # frames age past the deadline and must be expired at pop
+    svc = _service(sess, backend=MockBackend(
+        filter_latency=0.9, dnn_latency=0.9, jitter=0.0))
+    res = svc.run(_arrivals(C=1, n=40))
+    assert res.metrics["counters"]["sender.expired"] > 0
+    # expired pops reverted the sent counter (simulator bookkeeping)
+    assert sess.stats.sent == len(res.processed) + (
+        1 if svc.sender.free < svc.sender.tokens else 0)
+
+
+def test_coalescer_deadline_flush_partial_batch():
+    """A window that never fills still ships at the max_wait deadline."""
+    sess = _session(C=2)
+    svc = _service(sess, max_batch=64, max_wait=0.03)
+    res = svc.run(_arrivals(C=2, n=30))
+    bf = res.metrics["histograms"]["coalescer.batch_frames"]
+    assert bf["count"] > 0
+    assert bf["max"] < 64               # never a full window
+    waits = res.metrics["histograms"]["coalescer.wait_s"]
+    assert waits["max"] == pytest.approx(0.03)
+    assert len(res.offered) == 60       # nothing stranded in the window
+
+
+def test_full_window_flushes_before_deadline():
+    sess = _session(C=1)
+    svc = _service(sess, max_batch=2, max_wait=10.0)
+    res = svc.run(_arrivals(C=1, n=10))
+    bf = res.metrics["histograms"]["coalescer.batch_frames"]
+    assert bf["max"] == 2
+    assert res.metrics["histograms"]["coalescer.wait_s"]["max"] < 10.0
+    assert len(res.offered) == 10
+
+
+class _NoBatch:
+    """Proxy hiding ``offer_batch``/``step`` — a minimal shedder
+    surface, like a bare LoadShedder."""
+
+    def __init__(self, sess):
+        self._sess = sess
+
+    def __getattr__(self, name):
+        if name in ("offer_batch", "step"):
+            raise AttributeError(name)
+        return getattr(self._sess, name)
+
+    def __len__(self):
+        return len(self._sess)
+
+
+def test_sequential_offer_fallback_matches_batched():
+    """Shedders without ``offer_batch`` are served frame-at-a-time with
+    identical decisions (thresholds only move on control ticks, so
+    coalescing commutes with sequential offers)."""
+    arrivals = _arrivals(C=2, n=60)
+    sess_a = _session(C=2)
+    res_a = _service(sess_a).run(arrivals)
+    sess_b = _session(C=2)
+    res_b = _service(_NoBatch(sess_b)).run(arrivals)
+    assert res_a.kept_mask == res_b.kept_mask
+    assert res_a.metrics["counters"]["dispatch.batched"] > 0
+    assert res_b.metrics["counters"].get("dispatch.batched", 0) == 0
+    assert res_b.metrics["counters"]["dispatch.sequential"] == 120
+    assert sess_a.stats.dropped_admission == sess_b.stats.dropped_admission
+
+
+def test_measured_latency_closes_control_loop():
+    """The control loop runs on the transport's measured latencies: the
+    session's backend estimate converges to the mock's configured
+    latency, and the Eq. 19 target drop rate reflects it."""
+    sess = _session(C=2)
+    svc = _service(sess, backend=MockBackend(
+        filter_latency=0.12, dnn_latency=0.12, jitter=0.0))
+    res = svc.run(_arrivals(C=2, n=80))
+    assert sess.expected_proc() == pytest.approx(0.12, rel=1e-4)
+    ticks = [s for s in res.trace if s["target_drop_rate"] > 0]
+    assert ticks, "control loop never saw load"
+    # Eq. 19 with measured proc=0.12, C=2, fps=10: 1 - 1/(.12*2*10);
+    # the fps EWMA converges from the startup window, so compare the
+    # best-converged tick with a small tolerance
+    best = max(s["target_drop_rate"] for s in ticks)
+    assert best == pytest.approx(1.0 - 1.0 / (0.12 * 2 * 10.0), abs=0.03)
+
+
+def test_utility_only_arrival_requires_utility():
+    sess = _session(C=1)
+    svc = _service(sess)
+    bad = [Arrival(t=0.0, cam=0, record=Rec(0, 0, 0.0))]   # no utility/frame
+    with pytest.raises(ValueError, match="utility"):
+        svc.run(bad)
+
+
+# -- fused raw-frame path ----------------------------------------------------
+
+@pytest.mark.parametrize("cams", [1, 2])
+def test_fused_step_matches_precomputed_utilities(cams):
+    """Raw rectangular windows through ``step(frames=...)`` admit the
+    same frames as pre-scored utilities through ``offer_batch`` — the
+    in-dispatch scoring carries the same background lanes the offline
+    scorer did (chunk-size-invariant ingest)."""
+    from repro.data.pipeline import camera_array_records, scenario_records
+    from repro.data.synthetic import generate_dataset
+
+    h, w, T = 32, 48, 50
+    scs = generate_dataset(range(cams + 2), num_frames=T, height=h, width=w)
+    train, test = scs[:2], scs[2:]
+    q = Query.single(RED, latency_bound=1.0, fps=FPS)
+
+    def fitted_session():
+        s = open_session(q, num_cameras=cams, frame_shape=(h, w))
+        tr = [r for i, sc in enumerate(train)
+              for r in scenario_records(sc, i, list(q.colors), fps=FPS)]
+        s.fit(np.stack([r.pf for r in tr]), np.array([r.label for r in tr]))
+        return s
+
+    sess_f = fitted_session()
+    streams = camera_array_records(test, list(q.colors), model=sess_f.model,
+                                   fps=FPS)
+    arr_fused, arr_util = [], []
+    for c, stream in enumerate(streams):
+        rgb = test[c].frames_rgb()
+        for t, r in enumerate(stream):
+            arr_fused.append(Arrival(t=r.t_gen, cam=r.cam_id, record=r,
+                                     frame=rgb[t]))
+            arr_util.append(Arrival(t=r.t_gen, cam=r.cam_id, record=r,
+                                    utility=float(r.utility)))
+    for a in (arr_fused, arr_util):
+        a.sort(key=lambda x: x.t)
+
+    res_f = _service(sess_f).run(arr_fused)
+    assert res_f.metrics["counters"]["dispatch.fused"] > 0
+    assert res_f.metrics["counters"].get("dispatch.batched", 0) == 0
+
+    sess_u = fitted_session()
+    res_u = _service(sess_u).run(arr_util)
+    kept_f = {(p.record.cam_id, p.record.frame_idx) for p in res_f.processed}
+    kept_u = {(p.record.cam_id, p.record.frame_idx) for p in res_u.processed}
+    assert kept_f == kept_u
+    assert res_f.kept_mask == res_u.kept_mask
+
+
+# -- metrics -----------------------------------------------------------------
+
+def test_metrics_export_roundtrip(tmp_path):
+    sess = _session(C=2)
+    svc = _service(sess)
+    res = svc.run(_arrivals(C=2, n=40))
+    snap = res.metrics
+    for key in ("p50", "p99"):
+        assert key in snap["histograms"]["e2e.latency_s"]
+    for key in ("shed_rate", "ingest_fps", "violation_rate",
+                "backend_utilization"):
+        assert key in snap["derived"]
+    jpath = svc.metrics.to_json(tmp_path / "m.json")
+    assert json.loads(jpath.read_text()) == snap
+    cpath = svc.metrics.to_csv(tmp_path / "m.csv")
+    lines = cpath.read_text().splitlines()
+    assert lines[0] == "name,kind,field,value"
+    assert any(l.startswith("e2e.latency_s,histogram,p99,") for l in lines)
+
+
+def test_histogram_truncation_keeps_counting():
+    from repro.serve.metrics import Histogram
+    h = Histogram("x", cap=10)
+    for i in range(25):
+        h.observe(float(i))
+    s = h.summary()
+    assert s["count"] == 25 and s["max"] == 24.0 and s["truncated"]
+
+
+def test_queue_depths_hook():
+    sess = _session(C=3)
+    sess.offer_batch([Rec(c, 0, 0.0) for c in range(3)], [0.9, 0.9, 0.9])
+    depths = sess.queue_depths()
+    assert depths.shape == (3,) and depths.sum() == len(sess) == 3
+
+
+def test_empty_run():
+    svc = _service(_session(C=1))
+    res = svc.run([])
+    assert res.offered == [] and res.processed == [] and res.violations == 0
