@@ -16,7 +16,7 @@ from repro.core import RED, Query, batch_utilities, drop_rate, open_session, \
     overall_qor
 from repro.data.pipeline import interleave_streams
 from repro.serve.simulator import BackendProfile, PipelineSimulator
-from benchmarks.common import FPS, Timer, dataset, median_ms, records, \
+from benchmarks.common import FPS, Timer, best_ms, dataset, records, \
     train_model
 
 BENCH_SEED = 0          # every random draw below derives from this
@@ -37,7 +37,7 @@ def _fused_vs_sequential(model, quick: bool, nvid: int, frames: int):
     sess = open_session(query, num_cameras=C, model=model)
     sess.ingest(arr)            # compile (fresh-state trace)
     sess.ingest(arr)            # compile (carried-state trace)
-    t_batched = median_ms(lambda: sess.ingest(arr), n=9)
+    t_batched = best_ms(lambda: sess.ingest(arr), n=5, repeats=3)
 
     singles = [open_session(query, num_cameras=1, model=model)
                for _ in range(C)]
@@ -47,7 +47,7 @@ def _fused_vs_sequential(model, quick: bool, nvid: int, frames: int):
 
     sequential()                # compile (fresh + carried traces)
     sequential()
-    t_seq = median_ms(sequential, n=9)
+    t_seq = best_ms(sequential, n=5, repeats=3)
     return {
         "cameras": C,
         "batch_frames": int(arr.shape[1]),

@@ -66,3 +66,27 @@ def median_ms(fn, n: int = 30) -> float:
         fn()
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts)) * 1e3
+
+
+def best_ms(fn, n: int = 5, repeats: int = 3, warmup: int = 2) -> float:
+    """timeit-style min-of-repeats wall clock of ``fn()``, in ms.
+
+    Runs ``warmup`` untimed calls (absorbing lazy compiles, allocator
+    growth and cache warm-up), then ``repeats`` timed batches of ``n``
+    calls each and reports the *minimum* per-call batch average. The
+    minimum is the right statistic for comparing two code paths on a
+    shared box: contention and GC only ever add time, so the fastest
+    batch is the closest observable to the true cost. ``median_ms``
+    interleaves timing with per-call noise and can rank two near-equal
+    paths either way run-to-run (the historical source of sub-1.0x
+    "speedups" between identical-cost paths in CI).
+    """
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best * 1e3

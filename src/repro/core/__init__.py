@@ -1,7 +1,9 @@
 # The paper's primary contribution: utility-aware load shedding for
 # real-time video analytics (utility function, CDF threshold mapping,
 # control loop, utility-ordered bounded queue, QoR metrics), unified
-# behind the multi-camera session API (repro.core.session).
+# behind the multi-camera session API (repro.core.session). Fleet
+# scale-out (camera lanes sharded over a device mesh) lives in
+# repro.core.fleet and is reached via open_session(shard_cameras=True).
 from repro.core.colors import BLUE, COLORS, GREEN, RED, YELLOW, Color
 from repro.core.control import ControlLoop, LatencyInputs
 from repro.core.qor import drop_rate, overall_qor, per_object_qor

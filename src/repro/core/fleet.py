@@ -1,0 +1,332 @@
+"""Fleet-scale sharded serving: the camera axis of a ShedSession laid
+out over a device mesh.
+
+A ``SessionState`` is an all-array pytree of per-camera lanes — ``(C,
+N)`` backgrounds, ``(C, W)`` CDF rings, ``(C, K)`` queue lanes, ``(C,)``
+thresholds/EWMAs — and every hot-path operation (admission, CDF
+maintenance, queue selection, the Eq. 17–20 control tick) is row-local:
+camera ``c``'s outputs depend only on camera ``c``'s lanes. That makes
+the serve plane embarrassingly parallel over cameras, which is exactly
+the shape ``shard_map`` wants: shard the leading ``C`` dimension over a
+mesh axis and run the *same* per-camera program shard-locally with
+**zero cross-device collectives on the hot path**.
+
+The one quantity that is NOT shard-local is Eq. 19's service-time
+multiplier — the target drop rate ``r = 1 - 1/(p * C * fps)`` uses the
+number of cameras sharing the backend, which is the GLOBAL camera
+count. It is a static constant of the session, so it is baked into the
+shard program (``num_total``) rather than communicated; every shard
+derives bit-identical rates to the unsharded program.
+
+The only collective is one small optional ``psum`` tree (fleet
+aggregates: global offered/admitted/shed counts, queue depth, backend
+load, threshold stats) appended to the step for fleet-level
+observability and the control loop's measured-latency feed.
+
+Physical layout goes through the ``repro.sharding.api`` rules table:
+the logical ``"camera"`` axis resolves to a dedicated ``"camera"`` mesh
+axis (``fleet_mesh``), or falls back to a pure-DP axis so a fleet can
+ride an existing training mesh. Scalar leaves (``bg_valid``) replicate.
+
+Checkpoints are mesh-independent: ``ShedSession.checkpoint`` gathers
+every lane to host (global ``(C, ...)`` arrays), and ``restore``
+re-shards onto whatever mesh the restoring session holds — including a
+*different* device count than the one that saved.
+
+Entry point: ``open_session(query, C, shard_cameras=True)`` or
+``open_session(query, C, mesh=my_mesh)``; everything here is the
+machinery behind it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import resolve_axis
+
+AxisName = Union[str, Tuple[str, ...]]
+
+CAMERA_AXIS = "camera"
+
+# SessionState leaves WITHOUT a leading camera lane (replicated).
+_SCALAR_LEAVES = ("bg_valid",)
+
+
+def fleet_mesh(num_devices: Optional[int] = None,
+               axis_name: str = CAMERA_AXIS) -> Mesh:
+    """A 1-D mesh over ``num_devices`` (default: all) devices whose
+    single axis carries the camera dimension."""
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    return jax.make_mesh((n,), (axis_name,))
+
+
+def mesh_axis_size(mesh: Mesh, axis: AxisName) -> int:
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def camera_axis(mesh: Mesh, num_cameras: int, rules=None) -> AxisName:
+    """Resolve the physical mesh axis (or axis tuple) carrying the
+    logical ``"camera"`` dimension, via the sharding rules table.
+
+    Raises if no mesh axis divides ``num_cameras`` — camera sharding
+    needs an even split (pad the session's camera count to a multiple
+    of the mesh size; idle lanes are cheap, uneven shards are not
+    expressible as one shard_map program).
+    """
+    axis = resolve_axis("camera", int(num_cameras), mesh, set(), rules)
+    if axis is None:
+        raise ValueError(
+            f"cannot shard {num_cameras} cameras over mesh "
+            f"{dict(mesh.shape)}: no axis divides the camera count "
+            f"(pad num_cameras to a multiple of the mesh axis size)")
+    return axis
+
+
+def state_pspecs(state_or_cls, axis: AxisName = CAMERA_AXIS):
+    """A SessionState-shaped pytree of PartitionSpecs: every camera-lane
+    leaf sharded on ``axis`` along dim 0, scalar leaves replicated."""
+    fields = dataclasses.fields(state_or_cls)
+    cls = state_or_cls if isinstance(state_or_cls, type) \
+        else type(state_or_cls)
+    return cls(**{f.name: (P() if f.name in _SCALAR_LEAVES else P(axis))
+                  for f in fields})
+
+
+def state_shardings(mesh: Mesh, state,
+                    axis: AxisName = CAMERA_AXIS) -> Dict[str, NamedSharding]:
+    """Per-leaf NamedShardings, keyed by SessionState field name."""
+    specs = state_pspecs(state, axis)
+    return {f.name: NamedSharding(mesh, getattr(specs, f.name))
+            for f in dataclasses.fields(state)}
+
+
+def shard_state(state, mesh: Mesh, axis: AxisName = CAMERA_AXIS):
+    """Lay a SessionState out over the mesh (host or device input)."""
+    sh = state_shardings(mesh, state, axis)
+    return type(state)(**{
+        name: jax.device_put(jnp.asarray(getattr(state, name)), s)
+        for name, s in sh.items()})
+
+
+def gather_state(state):
+    """Pull every lane back to host as global NumPy arrays (the
+    checkpoint form; mesh-independent)."""
+    return type(state)(**{
+        f.name: np.asarray(getattr(state, f.name))
+        for f in dataclasses.fields(state)})
+
+
+# ---------------------------------------------------------------------------
+# Fleet aggregates — the ONE collective (small psum tree, off the
+# row-local hot path)
+# ---------------------------------------------------------------------------
+
+def _local_aggregates(state, axis: AxisName, decisions=None):
+    """Shard-local stats reduced with one psum each — global scalars,
+    replicated across the mesh."""
+    psum = functools.partial(jax.lax.psum, axis_name=axis)
+    finite = jnp.isfinite(state.threshold)
+    agg = {
+        "queue_depth": psum((state.q_seq >= 0).sum().astype(jnp.int32)),
+        "cdf_fill": psum(state.cdf_len.sum().astype(jnp.int32)),
+        "proc_q_sum": psum(state.proc_q.sum().astype(jnp.float32)),
+        "fps_obs_sum": psum(state.fps_obs.sum().astype(jnp.float32)),
+        "threshold_finite": psum(finite.sum().astype(jnp.int32)),
+        "threshold_sum": psum(jnp.where(finite, state.threshold, 0.0)
+                              .sum().astype(jnp.float32)),
+    }
+    if decisions is not None:
+        from repro.core.session import ADMIT
+        agg["offered"] = psum((decisions >= 0).sum().astype(jnp.int32))
+        agg["admitted"] = psum((decisions == ADMIT).sum().astype(jnp.int32))
+        agg["shed"] = psum((decisions > ADMIT).sum().astype(jnp.int32))
+    return agg
+
+
+def _empty_aggregates(with_decisions: bool):
+    z32, zf = jnp.int32(0), jnp.float32(0)
+    agg = {"queue_depth": z32, "cdf_fill": z32, "proc_q_sum": zf,
+           "fps_obs_sum": zf, "threshold_finite": z32, "threshold_sum": zf}
+    if with_decisions:
+        agg.update(offered=z32, admitted=z32, shed=z32)
+    return agg
+
+
+def derive_fleet_stats(agg: Dict[str, Any],
+                       num_cameras: int) -> Dict[str, float]:
+    """Host-side view of a psum aggregate tree: global rates/means."""
+    a = {k: float(np.asarray(v)) for k, v in agg.items()}
+    out = {
+        "queue_depth": int(a["queue_depth"]),
+        "cdf_fill": int(a["cdf_fill"]),
+        "proc_q_mean": a["proc_q_sum"] / num_cameras,
+        "fps_obs_mean": a["fps_obs_sum"] / num_cameras,
+        "threshold_mean": (a["threshold_sum"] / a["threshold_finite"]
+                           if a["threshold_finite"] else -np.inf),
+    }
+    if "offered" in a:
+        out.update(
+            offered=int(a["offered"]), admitted=int(a["admitted"]),
+            shed=int(a["shed"]),
+            shed_rate=(a["shed"] / a["offered"] if a["offered"] else 0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The sharded serve plane — shard_map'd twins of the session's device
+# programs. Row-local math only; num_total keeps Eq. 19 global.
+# ---------------------------------------------------------------------------
+
+def _out_pspecs(axis: AxisName, with_decisions: bool):
+    ctrl = {"decisions": P(axis), "pushed_seq": P(axis),
+            "evicted_resident": P(axis), "push_evictions": P(axis),
+            "rates": P(axis), "resize_evicted": P(axis)}
+    agg = {k: P() for k in _empty_aggregates(with_decisions)}
+    return ctrl, agg
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "num_total", "masked", "update_cdf",
+                     "do_tick", "min_proc", "budget", "aggregate"),
+    donate_argnames=("state",))
+def _fleet_control(state, util, present, *, mesh, axis, num_total, masked,
+                   update_cdf, do_tick, min_proc, budget, aggregate):
+    """Sharded control step: CDF push -> admission -> queue selection ->
+    (optional) tick, each camera shard running the identical row-local
+    program; one optional psum aggregate tree rides along."""
+    from repro.core.session import SessionState, _control_core_dev
+    st_spec = state_pspecs(SessionState, axis)
+    ctrl_spec, agg_spec = _out_pspecs(axis, True)
+
+    def local(st, u, pres):
+        st, out = _control_core_dev(
+            st, u, pres if masked else None, update_cdf=update_cdf,
+            do_tick=do_tick, min_proc=min_proc, budget=budget,
+            num_total=num_total)
+        agg = (_local_aggregates(st, axis, out["decisions"]) if aggregate
+               else _empty_aggregates(True))
+        return st, out, agg
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(st_spec, P(axis), P(axis)),
+        out_specs=(st_spec, ctrl_spec, agg_spec),
+        check_rep=False)(state, util, present)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "num_total", "hue_ranges", "bs", "bv",
+                     "alpha", "fg_threshold", "use_fg", "bg_valid", "op",
+                     "impl", "interpret", "update_cdf", "do_tick",
+                     "min_proc", "budget", "aggregate"),
+    donate_argnames=("state",))
+def _fleet_serve_step(state, frames, M_pos, norm, *, mesh, axis, num_total,
+                      hue_ranges, bs, bv, alpha, fg_threshold, use_fg,
+                      bg_valid, op, impl, interpret, update_cdf, do_tick,
+                      min_proc, budget, aggregate):
+    """The sharded tentpole program: fused ingest -> control, each
+    camera shard one self-contained device program (the ingest kernel's
+    per-camera background/gain lanes are row-local too)."""
+    from repro.core.session import SessionState, _control_core_dev
+    from repro.kernels.hsv_features.ops import ingest_core
+    st_spec = state_pspecs(SessionState, axis)
+    ctrl_spec, agg_spec = _out_pspecs(axis, True)
+
+    def local(st, fr, mp, nm):
+        bg0 = st.bg if bg_valid else jnp.zeros_like(st.bg)
+        gain0 = st.gain if bg_valid else jnp.ones_like(st.gain)
+        _, _, _, util, bg, gain = ingest_core(
+            fr, bg0, gain0, mp, nm, hue_ranges=hue_ranges, bs=bs, bv=bv,
+            alpha=alpha, threshold=fg_threshold, use_fg=use_fg,
+            bg_valid=bg_valid, op=op, impl=impl, interpret=interpret)
+        st = dataclasses.replace(st, bg=bg, gain=gain,
+                                 bg_valid=jnp.asarray(True))
+        st, out = _control_core_dev(
+            st, util, None, update_cdf=update_cdf, do_tick=do_tick,
+            min_proc=min_proc, budget=budget, num_total=num_total)
+        agg = (_local_aggregates(st, axis, out["decisions"]) if aggregate
+               else _empty_aggregates(True))
+        return st, out, agg
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(st_spec, P(axis), P(), P()),
+        out_specs=(st_spec, ctrl_spec, agg_spec),
+        check_rep=False)(state, frames, M_pos, norm)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "num_total", "min_proc", "budget"),
+    donate_argnames=("state",))
+def _fleet_tick(state, *, mesh, axis, num_total, min_proc, budget):
+    """Sharded Eq. 18–20 tick: per-shard batched quantile + queue
+    resize; rates use the GLOBAL camera count."""
+    from repro.core.session import SessionState, _tick_core_dev
+    st_spec = state_pspecs(SessionState, axis)
+
+    def local(st):
+        st, rates, resize_ev = _tick_core_dev(st, min_proc, budget,
+                                              num_total)
+        return st, rates, resize_ev
+
+    return shard_map(
+        local, mesh=mesh, in_specs=(st_spec,),
+        out_specs=(st_spec, P(axis), P(axis)),
+        check_rep=False)(state)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
+def _fleet_aggregates(state, *, mesh, axis):
+    from repro.core.session import SessionState
+    st_spec = state_pspecs(SessionState, axis)
+    agg_spec = {k: P() for k in _empty_aggregates(False)}
+    return shard_map(
+        lambda st: _local_aggregates(st, axis), mesh=mesh,
+        in_specs=(st_spec,), out_specs=agg_spec,
+        check_rep=False)(state)
+
+
+# -- python-facing wrappers (keyword plumbing, mesh/axis hashability) -------
+
+def control_step(state, util, present=None, *, mesh, axis, num_total,
+                 update_cdf, do_tick, min_proc, budget, aggregate=False):
+    masked = present is not None
+    if present is None:
+        present = jnp.ones(util.shape, bool)
+    return _fleet_control(
+        state, util, present, mesh=mesh, axis=axis, num_total=num_total,
+        masked=masked, update_cdf=update_cdf, do_tick=do_tick,
+        min_proc=min_proc, budget=budget, aggregate=aggregate)
+
+
+def serve_step(state, frames, M_pos, norm, **kw):
+    return _fleet_serve_step(state, frames, M_pos, norm, **kw)
+
+
+def tick(state, *, mesh, axis, num_total, min_proc, budget):
+    return _fleet_tick(state, mesh=mesh, axis=axis, num_total=num_total,
+                       min_proc=min_proc, budget=budget)
+
+
+def aggregates(state, *, mesh, axis, num_cameras: int) -> Dict[str, float]:
+    """Run the standalone observability psum over the sharded state."""
+    return derive_fleet_stats(
+        _fleet_aggregates(state, mesh=mesh, axis=axis), num_cameras)
+
+
+__all__ = [
+    "CAMERA_AXIS", "aggregates", "camera_axis", "control_step",
+    "derive_fleet_stats", "fleet_mesh", "gather_state", "mesh_axis_size",
+    "serve_step", "shard_state", "state_pspecs", "state_shardings", "tick",
+]

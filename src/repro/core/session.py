@@ -307,10 +307,17 @@ def _ring_push_host(buf, pos, ln, us, mask):
     return pos, ln
 
 
-def _tick_core_dev(state: SessionState, min_proc: float, budget: float):
+def _tick_core_dev(state: SessionState, min_proc: float, budget: float,
+                   num_total: Optional[int] = None):
     """Eq. 18–20 re-derivation on device: target rates from the metric
-    lanes, thresholds via ONE batched (C, W) sort, queue caps + resize."""
-    C = state.threshold.shape[0]
+    lanes, thresholds via ONE batched (C, W) sort, queue caps + resize.
+
+    ``num_total`` is the number of cameras sharing the backend — Eq. 19's
+    service-time multiplier. It defaults to the local lane count; a
+    camera-sharded fleet step (repro.core.fleet) passes the GLOBAL count
+    so every shard derives the same rates as the unsharded program.
+    """
+    C = num_total if num_total is not None else state.threshold.shape[0]
     p = jnp.maximum(state.proc_q, min_proc)
     # single-division form of Eq. 19's 1 - (ST/C)/fps: bit-stable under
     # XLA (the two-division chain gets algebraically rewritten by the
@@ -327,9 +334,10 @@ def _tick_core_dev(state: SessionState, min_proc: float, budget: float):
     return state, rates, resize_ev
 
 
-def _tick_core_host(state: SessionState, min_proc: float, budget: float):
+def _tick_core_host(state: SessionState, min_proc: float, budget: float,
+                    num_total: Optional[int] = None):
     """NumPy twin of :func:`_tick_core_dev`; mutates state in place."""
-    C = state.threshold.shape[0]
+    C = num_total if num_total is not None else state.threshold.shape[0]
     p = np.maximum(state.proc_q, min_proc)
     rates = np.clip(
         1.0 - np.float32(1.0) / (p * C * np.maximum(state.fps_obs, 1e-9)),
@@ -344,7 +352,8 @@ def _tick_core_host(state: SessionState, min_proc: float, budget: float):
 
 def _control_core_dev(state: SessionState, util, present, *,
                       update_cdf: bool, do_tick: bool,
-                      min_proc: float, budget: float):
+                      min_proc: float, budget: float,
+                      num_total: Optional[int] = None):
     """CDF push -> admission -> queue selection -> (optional) tick, all
     traced. Returns (state', outputs-dict of compact arrays)."""
     util = util.astype(jnp.float32)
@@ -379,7 +388,8 @@ def _control_core_dev(state: SessionState, util, present, *,
         "resize_evicted": jnp.full_like(state.q_seq, -1),
     }
     if do_tick:
-        state, rates, resize_ev = _tick_core_dev(state, min_proc, budget)
+        state, rates, resize_ev = _tick_core_dev(state, min_proc, budget,
+                                                 num_total)
         out["rates"] = rates
         out["resize_evicted"] = resize_ev
     return state, out
@@ -387,7 +397,8 @@ def _control_core_dev(state: SessionState, util, present, *,
 
 def _control_core_host(state: SessionState, util, present, *,
                        update_cdf: bool, do_tick: bool,
-                       min_proc: float, budget: float):
+                       min_proc: float, budget: float,
+                       num_total: Optional[int] = None):
     """NumPy twin of :func:`_control_core_dev`; mutates state in place."""
     util = np.asarray(util, np.float32)
     C, T = util.shape
@@ -414,7 +425,8 @@ def _control_core_host(state: SessionState, util, present, *,
         "resize_evicted": np.full_like(state.q_seq, -1),
     }
     if do_tick:
-        rates, resize_ev = _tick_core_host(state, min_proc, budget)
+        rates, resize_ev = _tick_core_host(state, min_proc, budget,
+                                           num_total)
         out["rates"] = rates
         out["resize_evicted"] = resize_ev
     return state, out
@@ -534,7 +546,10 @@ class ShedSession:
                  update_cdf_online: bool = True,
                  impl: Optional[str] = None,
                  interpret: Optional[bool] = None,
-                 serve: Optional[str] = None) -> None:
+                 serve: Optional[str] = None,
+                 mesh: Optional[Any] = None,
+                 shard_cameras: Optional[bool] = None,
+                 fleet_aggregate: bool = False) -> None:
         if num_cameras < 1:
             raise ValueError("num_cameras must be >= 1")
         self.query = query
@@ -547,6 +562,25 @@ class ShedSession:
         self.update_cdf_online = bool(update_cdf_online)
         self.impl = impl
         self.interpret = interpret
+        # fleet mode: shard the camera lanes over a device mesh
+        # (repro.core.fleet). shard_cameras=True without a mesh builds a
+        # 1-D mesh over every device; a mesh alone implies sharding.
+        if shard_cameras is None:
+            shard_cameras = mesh is not None
+        self.mesh = None
+        self._cam_axis: Optional[Any] = None
+        self._shardings: Optional[Dict[str, Any]] = None
+        self.fleet_aggregate = bool(fleet_aggregate)
+        self.last_fleet_stats: Optional[Dict[str, float]] = None
+        if shard_cameras:
+            from repro.core import fleet as _fleet
+            if serve == "host":
+                raise ValueError(
+                    "shard_cameras requires serve='device' (the sharded "
+                    "serve plane is a shard_map'd device program)")
+            serve = "device"
+            self.mesh = mesh if mesh is not None else _fleet.fleet_mesh()
+            self._cam_axis = _fleet.camera_axis(self.mesh, self.num_cameras)
         if serve is None:
             serve = "device" if jax.default_backend() == "tpu" else "host"
         if serve not in ("host", "device"):
@@ -559,6 +593,12 @@ class ShedSession:
             num_cameras, npix, cdf_window=cdf_window, fps=query.fps,
             queue_size=queue_size, queue_capacity=queue_capacity,
             xp=self._xp)
+        if self.mesh is not None:
+            from repro.core import fleet as _fleet
+            self._shardings = _fleet.state_shardings(
+                self.mesh, self.state, self._cam_axis)
+            self.state = _fleet.shard_state(self.state, self.mesh,
+                                            self._cam_axis)
         self.queue_capacity = int(self.state.q_util.shape[1])
         self._payloads: List[Dict[int, Any]] = [
             {} for _ in range(self.num_cameras)]
@@ -640,7 +680,10 @@ class ShedSession:
                 raise ValueError(
                     f"frame size {n} px does not match carried background "
                     f"state {st.bg.shape}")
-            st.bg = self._xp.zeros((self.num_cameras, n), self._xp.float32)
+            bg = self._xp.zeros((self.num_cameras, n), self._xp.float32)
+            if self._shardings is not None:
+                bg = jax.device_put(bg, self._shardings["bg"])
+            st.bg = bg
         return frames
 
     def ingest(self, frames: np.ndarray, *, impl: Optional[str] = None,
@@ -736,15 +779,24 @@ class ShedSession:
                 use_impl = impl if impl is not None else self.impl
                 if use_impl is None:
                     use_impl = default_impl()
-                self.state, out = _serve_step_dev(
-                    self.state, flat, M_pos, norm,
+                ingest_kw = dict(
                     hue_ranges=q.hue_ranges, bs=q.bs, bv=q.bv,
                     alpha=q.alpha, fg_threshold=q.threshold,
                     use_fg=q.use_foreground,
                     bg_valid=bool(self.state.bg_valid), op=op,
                     impl=use_impl,
                     interpret=(interpret if interpret is not None
-                               else self.interpret), **kw)
+                               else self.interpret))
+                if self.mesh is not None:
+                    from repro.core import fleet as _fleet
+                    self.state, out, agg = _fleet.serve_step(
+                        self.state, flat, M_pos, norm, mesh=self.mesh,
+                        axis=self._cam_axis, num_total=self.num_cameras,
+                        aggregate=self.fleet_aggregate, **ingest_kw, **kw)
+                    self._absorb_fleet(agg)
+                else:
+                    self.state, out = _serve_step_dev(
+                        self.state, flat, M_pos, norm, **ingest_kw, **kw)
                 return self._absorb_control(out, items, tick)
             util = self.ingest(frames, impl=impl,
                                interpret=interpret).utility
@@ -759,8 +811,17 @@ class ShedSession:
             if util.shape[1] == 0:
                 raise ValueError("empty utility batch")
         if self.serve == "device":
-            self.state, out = _control_step_dev(
-                self.state, jnp.asarray(util, jnp.float32), **kw)
+            if self.mesh is not None:
+                from repro.core import fleet as _fleet
+                self.state, out, agg = _fleet.control_step(
+                    self.state, jnp.asarray(util, jnp.float32),
+                    mesh=self.mesh, axis=self._cam_axis,
+                    num_total=self.num_cameras,
+                    aggregate=self.fleet_aggregate, **kw)
+                self._absorb_fleet(agg)
+            else:
+                self.state, out = _control_step_dev(
+                    self.state, jnp.asarray(util, jnp.float32), **kw)
         else:
             self.state, out = _control_core_host(
                 self.state, util, None, **kw)
@@ -809,6 +870,29 @@ class ShedSession:
                         [evicted[c], evs.astype(np.int64)])
         return StepResult(decisions=decisions, pushed_seq=pushed_seq,
                           evicted=evicted, target_drop_rate=rates)
+
+    # -- fleet observability (sharded sessions) ------------------------------
+
+    def _absorb_fleet(self, agg: Dict[str, Any]) -> None:
+        """Keep the latest psum aggregate tree (host view) when the
+        sharded step computed one."""
+        if self.fleet_aggregate:
+            from repro.core import fleet as _fleet
+            self.last_fleet_stats = _fleet.derive_fleet_stats(
+                agg, self.num_cameras)
+
+    def fleet_stats(self) -> Dict[str, float]:
+        """Global fleet aggregates — queue depth, backend load, mean
+        threshold — via ONE small psum over the mesh (the only
+        collective in the sharded serve plane)."""
+        if self.mesh is None:
+            raise ValueError("fleet_stats() needs a camera-sharded "
+                             "session (open_session(..., shard_cameras"
+                             "=True))")
+        from repro.core import fleet as _fleet
+        return _fleet.aggregates(self.state, mesh=self.mesh,
+                                 axis=self._cam_axis,
+                                 num_cameras=self.num_cameras)
 
     # -- admission + queues --------------------------------------------------
 
@@ -917,8 +1001,17 @@ class ShedSession:
         kw = dict(update_cdf=self.update_cdf_online, do_tick=False,
                   min_proc=self.min_proc, budget=self._budget)
         if self.serve == "device":
-            self.state, out = _control_masked_dev(
-                self.state, jnp.asarray(util), jnp.asarray(present), **kw)
+            if self.mesh is not None:
+                from repro.core import fleet as _fleet
+                self.state, out, agg = _fleet.control_step(
+                    self.state, jnp.asarray(util), jnp.asarray(present),
+                    mesh=self.mesh, axis=self._cam_axis,
+                    num_total=self.num_cameras,
+                    aggregate=self.fleet_aggregate, **kw)
+                self._absorb_fleet(agg)
+            else:
+                self.state, out = _control_masked_dev(
+                    self.state, jnp.asarray(util), jnp.asarray(present), **kw)
         else:
             self.state, out = _control_core_host(
                 self.state, util, present, **kw)
@@ -969,20 +1062,35 @@ class ShedSession:
     def latency_bound(self) -> float:
         return self.query.latency_bound
 
-    def expected_proc(self) -> float:
-        """Current backend per-frame latency estimate (shared backend:
-        every lane carries the same value)."""
+    def expected_proc(self, cam: Optional[int] = None) -> float:
+        """Current backend per-frame latency estimate: camera ``cam``'s
+        lane, or (default) the worst lane — the conservative shared
+        value every lane carries under scalar reporting."""
+        if cam is not None:
+            return float(np.asarray(self.state.proc_q)[int(cam)])
         return float(np.asarray(self.state.proc_q).max(initial=0.0))
 
-    def report_backend_latency(self, proc_latency: float) -> None:
-        """Shared-backend metric feed: asymmetric EWMA on every lane
-        (overload must be detected fast, recovery can be smoothed)."""
+    def report_backend_latency(self, proc_latency: float,
+                               cam: Optional[int] = None) -> None:
+        """Backend-latency metric feed: asymmetric EWMA (overload must
+        be detected fast, recovery can be smoothed) on ``(C,)`` lanes.
+
+        A scalar call (``cam=None``) broadcasts to every lane — the
+        shared-backend form, bit-identical to the pre-lane behavior.
+        Pass ``cam`` to update one camera's lane, so heterogeneous
+        backends and sharded fleets estimate latency per camera."""
         st, xp = self.state, self._xp
         x = max(float(proc_latency), self.min_proc)
         a = xp.where(x > st.proc_q, self.ewma_alpha_up, self.ewma_alpha)
-        st.proc_q = xp.where(st.proc_seen, st.proc_q + a * (x - st.proc_q),
-                             x).astype(xp.float32)
-        st.proc_seen = xp.ones_like(st.proc_seen)
+        new = xp.where(st.proc_seen, st.proc_q + a * (x - st.proc_q),
+                       x).astype(xp.float32)
+        if cam is None:
+            st.proc_q = new
+            st.proc_seen = xp.ones_like(st.proc_seen)
+        else:
+            upd = xp.arange(self.num_cameras) == int(cam)
+            st.proc_q = xp.where(upd, new, st.proc_q).astype(xp.float32)
+            st.proc_seen = st.proc_seen | upd
 
     def report_ingress_fps(self, fps: float, cam: Optional[int] = None) -> None:
         """Observed ingress rate: per camera, or an aggregate rate split
@@ -1005,8 +1113,15 @@ class ShedSession:
         (Eq. 20) from the current metric lanes — one batched quantile +
         queue resize over all C camera lanes."""
         if self.serve == "device":
-            self.state, rates, resize_ev = _tick_dev(
-                self.state, min_proc=self.min_proc, budget=self._budget)
+            if self.mesh is not None:
+                from repro.core import fleet as _fleet
+                self.state, rates, resize_ev = _fleet.tick(
+                    self.state, mesh=self.mesh, axis=self._cam_axis,
+                    num_total=self.num_cameras, min_proc=self.min_proc,
+                    budget=self._budget)
+            else:
+                self.state, rates, resize_ev = _tick_dev(
+                    self.state, min_proc=self.min_proc, budget=self._budget)
             rates, resize_ev = np.asarray(rates), np.asarray(resize_ev)
         else:
             rates, resize_ev = _tick_core_host(
@@ -1055,7 +1170,10 @@ class ShedSession:
         model) via ``repro.train.checkpoint`` (atomic, async-capable).
         Queue lanes persist; queued frame *payloads* are live host
         objects and do not — restored queue entries fall back to
-        ``(cam, seq)`` pairs."""
+        ``(cam, seq)`` pairs. Camera-sharded lanes are gathered to host
+        as global ``(C, ...)`` arrays, so the checkpoint is
+        mesh-independent: ``restore`` re-shards onto the restoring
+        session's mesh, whatever its device count."""
         from repro.train import checkpoint as ckpt
         meta = {
             "kind": "shed_session",
@@ -1087,8 +1205,16 @@ class ShedSession:
         for k in self.state.as_dict():
             # host lanes must be writable copies (restored buffers can be
             # read-only views of device arrays)
-            leaf = (jnp.asarray(out[k]) if self.serve == "device"
-                    else np.array(out[k]))
+            if self._shardings is not None:
+                # re-shard the global (C, ...) checkpoint arrays onto
+                # THIS session's mesh — which may hold a different
+                # device count than the mesh that saved them
+                leaf = jax.device_put(np.asarray(out[k]),
+                                      self._shardings[k])
+            elif self.serve == "device":
+                leaf = jnp.asarray(out[k])
+            else:
+                leaf = np.array(out[k])
             setattr(self.state, k, leaf)
         if meta.get("has_model"):
             self.model = UtilityModel(
@@ -1111,6 +1237,15 @@ def open_session(query: Query, num_cameras: int = 1, **kw: Any) -> ShedSession:
     ``impl``/``interpret`` (ingest dispatch overrides), and ``serve``
     ("device" = jitted XLA serve step with donated state buffers,
     "host" = bit-identical vectorized NumPy; default backend-aware).
+
+    Fleet scale-out: ``shard_cameras=True`` (or ``mesh=some_mesh``)
+    shards the camera lanes over a device mesh via ``repro.core.fleet``
+    — ``step``/``tick``/``offer_batch`` become shard_map'd programs with
+    zero cross-device collectives on the hot path, bit-identical to the
+    unsharded device step; ``fleet_aggregate=True`` adds one small psum
+    of global shed/queue/backend stats per step (``last_fleet_stats``,
+    ``fleet_stats()``). ``num_cameras`` must divide evenly over the
+    mesh's camera axis.
     """
     return ShedSession(query, num_cameras, **kw)
 

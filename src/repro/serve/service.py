@@ -203,9 +203,14 @@ class ServeService:
                  control_period: float = 0.5,
                  fps_window: float = 2.0,
                  expire_in_queue: bool = True,
+                 per_camera_latency: bool = False,
                  latency_inputs: Optional[LatencyInputs] = None,
                  metrics: Optional[MetricsRegistry] = None) -> None:
         self.session = session
+        # feed each completion's measured latency into its own camera's
+        # proc_q lane instead of broadcasting to all lanes — needs a
+        # session whose report_backend_latency accepts ``cam=``
+        self.per_camera_latency = bool(per_camera_latency)
         self.clock: Clock = clock if clock is not None else WallClock()
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.num_cameras = int(getattr(session, "num_cameras", 1))
@@ -315,7 +320,12 @@ class ServeService:
         if e2e > self.session.latency_bound:
             m.counter("e2e.violations").inc()
         # the loop-closing feed: the MEASURED latency, not a model
-        self.session.report_backend_latency(o.latency)
+        cam = getattr(o.item, "cam_id", None)
+        if self.per_camera_latency and cam is not None:
+            self.session.report_backend_latency(o.latency,
+                                                cam=self._lane(cam))
+        else:
+            self.session.report_backend_latency(o.latency)
         self._pump(now)
 
     def _on_control(self, now: float) -> None:

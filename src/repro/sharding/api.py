@@ -40,6 +40,11 @@ DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
     "dconv": (),
     "table_d": (),               # embed/lm-head d_model dim: never sharded
     "seq_shard": ("model",),     # saved-activation sequence sharding (SP)
+    # serve-plane camera lanes (repro.core.fleet): per-camera session
+    # state is embarrassingly parallel, so the leading C dim shards over
+    # a dedicated "camera" mesh axis, or rides a pure-DP axis when the
+    # fleet shares a training mesh
+    "camera": ("camera", "data", "dp"),
 }
 
 

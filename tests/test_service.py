@@ -205,6 +205,30 @@ def test_measured_latency_closes_control_loop():
     assert best == pytest.approx(1.0 - 1.0 / (0.12 * 2 * 10.0), abs=0.03)
 
 
+def test_per_camera_latency_feed():
+    """``per_camera_latency=True`` routes each completion's measured
+    latency to the lane of the camera that produced it; the default
+    broadcasts one shared estimate to every lane."""
+    from repro.serve import CallableBackend
+    lat = {0: 0.05, 1: 0.20}
+    backend = lambda: CallableBackend(lambda item: lat[item.cam_id])
+
+    sess = _session(C=2)
+    _service(sess, backend=backend()).run(_arrivals(C=2, n=60))
+    shared = np.asarray(sess.state.proc_q)
+    assert shared[0] == shared[1]           # broadcast: one shared EWMA
+
+    sess2 = _session(C=2)
+    _service(sess2, backend=backend(),
+             per_camera_latency=True).run(_arrivals(C=2, n=60))
+    per_cam = np.asarray(sess2.state.proc_q)
+    assert per_cam[0] == pytest.approx(0.05, rel=1e-3)
+    assert per_cam[1] == pytest.approx(0.20, rel=1e-3)
+    # expected_proc stays conservative: the worst lane
+    assert sess2.expected_proc() == pytest.approx(per_cam[1])
+    assert sess2.expected_proc(cam=0) == pytest.approx(per_cam[0])
+
+
 def test_utility_only_arrival_requires_utility():
     sess = _session(C=1)
     svc = _service(sess)
