@@ -26,6 +26,7 @@ BENCHES = [
     ("serve_step_fused", "benchmarks.bench_serve_step"),
     ("fleet_sharded", "benchmarks.bench_fleet"),
     ("service_streaming", "benchmarks.bench_service"),
+    ("scenarios_resilience", "benchmarks.bench_scenarios"),
     ("roofline_summary", "benchmarks.roofline"),
 ]
 
@@ -34,17 +35,20 @@ BENCHES = [
 # trajectory is tracked in one file across PRs instead of eyeballed
 # from stdout
 CONSOLIDATED = Path("BENCH_serve.json")
+# robustness scenarios land in their own consolidated file — they are
+# pass/fail acceptance facts + QoR-under-stress, not perf trajectory
+SCENARIO_FILE = Path("BENCH_scenarios.json")
 
 
-def _write_consolidated(results: dict) -> None:
+def _write_consolidated(results: dict, path: Path = CONSOLIDATED) -> None:
     merged = {}
-    if CONSOLIDATED.exists():
+    if path.exists():
         try:
-            merged = json.loads(CONSOLIDATED.read_text())
+            merged = json.loads(path.read_text())
         except (OSError, json.JSONDecodeError):
             merged = {}
     merged.update(results)
-    CONSOLIDATED.write_text(
+    path.write_text(
         json.dumps(merged, indent=2, sort_keys=True) + "\n")
 
 
@@ -75,14 +79,24 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
             res = mod.run(quick=not args.full)
             (outdir / f"{name}.json").write_text(json.dumps(res, indent=2))
-            consolidated[name] = {"us_per_call": res["us_per_call"],
-                                  "derived": res["derived"],
-                                  "mode": "full" if args.full else "quick"}
+            entry = {"us_per_call": res["us_per_call"],
+                     "derived": res["derived"],
+                     "mode": "full" if args.full else "quick"}
+            if "scenarios" in res:
+                _write_consolidated(
+                    {name: {**entry, "scenarios": res["scenarios"]}},
+                    SCENARIO_FILE)
+            else:
+                consolidated[name] = entry
             derived = json.dumps(res["derived"], sort_keys=True)
             print(f'{name},{res["us_per_call"]:.1f},"{derived}"', flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
-            consolidated[name] = {"error": f"{type(e).__name__}: {e}"}
+            err = {"error": f"{type(e).__name__}: {e}"}
+            if name.startswith("scenarios"):
+                _write_consolidated({name: err}, SCENARIO_FILE)
+            else:
+                consolidated[name] = err
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     if consolidated:

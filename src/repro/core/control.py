@@ -57,6 +57,15 @@ class ControlLoop:
         self.proc_q = EWMA(alpha, alpha_up=0.6)
         self.fps_observed = EWMA(alpha, init=fps)
         self.min_proc = min_proc
+        # degraded-mode floor under the Eq. 19 rate (serve/fault.py):
+        # raised toward the drop rate implied by zero effective capacity
+        # while the backend is unhealthy; 0.0 = normal regime (identity)
+        self.rate_floor = 0.0
+
+    def set_rate_floor(self, floor: float) -> None:
+        if not 0.0 <= floor <= 1.0:
+            raise ValueError(f"rate floor {floor} outside [0, 1]")
+        self.rate_floor = float(floor)
 
     # -- metric feeds -------------------------------------------------------
     def report_backend_latency(self, proc_latency: float):
@@ -73,7 +82,7 @@ class ControlLoop:
     def target_drop_rate(self) -> float:
         fps = max(self.fps_observed.value, 1e-9)
         st = self.supported_throughput()
-        return max(0.0, 1.0 - st / fps)
+        return max(max(0.0, 1.0 - st / fps), self.rate_floor)
 
     # -- Eq. 20 -------------------------------------------------------------
     def queue_size(self) -> int:

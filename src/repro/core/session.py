@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import heapq
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -197,6 +198,11 @@ class SessionState:
     q_util: Any      # (C, K) float32
     q_seq: Any       # (C, K) int32
     q_next_seq: Any  # (C,) int32
+    active: Any      # (C,) bool — detached lanes are masked out of
+    #                  control (threshold forced +inf so they admit
+    #                  nothing); all-True is bit-identical to pre-churn
+    rate_floor: Any  # (C,) float32 — degraded-mode floor under the
+    #                  Eq. 19 target drop rates; 0 = normal regime
 
     @property
     def num_cameras(self) -> int:
@@ -228,6 +234,8 @@ class SessionState:
             fps_seen=xp.zeros((C,), bool),
             queue_cap=xp.full((C,), int(queue_size), xp.int32),
             q_util=q_util, q_seq=q_seq, q_next_seq=q_next,
+            active=xp.ones((C,), bool),
+            rate_floor=xp.zeros((C,), xp.float32),
         )
 
 
@@ -325,7 +333,12 @@ def _tick_core_dev(state: SessionState, min_proc: float, budget: float,
     rates = jnp.clip(
         1.0 - 1.0 / (p * C * jnp.maximum(state.fps_obs, 1e-9)),
         0.0, 1.0).astype(jnp.float32)
+    # degraded-mode floor + churn mask: exact elementwise ops AFTER the
+    # Eq. 19 expression, so floor=0 / all-active stays bit-identical
+    rates = jnp.maximum(rates, state.rate_floor).astype(jnp.float32)
+    rates = jnp.where(state.active, rates, jnp.float32(0.0))
     threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len, rates)
+    threshold = jnp.where(state.active, threshold, jnp.float32(jnp.inf))
     cap = jnp.maximum((budget / p + 1e-9).astype(jnp.int32) - 1, 1)
     q_util, q_seq, resize_ev = sq.resize_dev(state.q_util, state.q_seq, cap)
     state = dataclasses.replace(
@@ -342,8 +355,12 @@ def _tick_core_host(state: SessionState, min_proc: float, budget: float,
     rates = np.clip(
         1.0 - np.float32(1.0) / (p * C * np.maximum(state.fps_obs, 1e-9)),
         0.0, 1.0).astype(np.float32)
-    state.threshold = thresholds_from_lanes_host(
+    rates = np.maximum(rates, state.rate_floor).astype(np.float32)
+    rates = np.where(state.active, rates, np.float32(0.0))
+    threshold = thresholds_from_lanes_host(
         state.cdf_buf, state.cdf_len, rates)
+    state.threshold = np.where(state.active, threshold,
+                               np.float32(np.inf)).astype(np.float32)
     cap = np.maximum((budget / p + 1e-9).astype(np.int32) - 1, 1)
     state.queue_cap = cap.astype(np.int32)
     resize_ev = sq.resize_host(state.q_util, state.q_seq, cap)
@@ -434,34 +451,39 @@ def _control_core_host(state: SessionState, util, present, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("update_cdf", "do_tick", "min_proc", "budget"),
+    static_argnames=("update_cdf", "do_tick", "min_proc", "budget",
+                     "num_total"),
     donate_argnames=("state",))
-def _control_step_dev(state, util, *, update_cdf, do_tick, min_proc, budget):
+def _control_step_dev(state, util, *, update_cdf, do_tick, min_proc, budget,
+                      num_total=None):
     return _control_core_dev(state, util, None, update_cdf=update_cdf,
                              do_tick=do_tick, min_proc=min_proc,
-                             budget=budget)
+                             budget=budget, num_total=num_total)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("update_cdf", "do_tick", "min_proc", "budget"),
+    static_argnames=("update_cdf", "do_tick", "min_proc", "budget",
+                     "num_total"),
     donate_argnames=("state",))
 def _control_masked_dev(state, util, present, *, update_cdf, do_tick,
-                        min_proc, budget):
+                        min_proc, budget, num_total=None):
     return _control_core_dev(state, util, present, update_cdf=update_cdf,
                              do_tick=do_tick, min_proc=min_proc,
-                             budget=budget)
+                             budget=budget, num_total=num_total)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("hue_ranges", "bs", "bv", "alpha", "fg_threshold",
                      "use_fg", "bg_valid", "op", "impl", "interpret",
-                     "update_cdf", "do_tick", "min_proc", "budget"),
+                     "update_cdf", "do_tick", "min_proc", "budget",
+                     "num_total"),
     donate_argnames=("state",))
 def _serve_step_dev(state, frames, M_pos, norm, *, hue_ranges, bs, bv,
                     alpha, fg_threshold, use_fg, bg_valid, op, impl,
-                    interpret, update_cdf, do_tick, min_proc, budget):
+                    interpret, update_cdf, do_tick, min_proc, budget,
+                    num_total=None):
     """The tentpole device program: fused ingest -> CDF push ->
     admission -> queue selection -> threshold/queue-size control, ONE
     jitted dispatch with the state pytree's buffers donated. Utilities
@@ -478,7 +500,7 @@ def _serve_step_dev(state, frames, M_pos, norm, *, hue_ranges, bs, bv,
                                 bg_valid=jnp.asarray(True))
     return _control_core_dev(state, util, None, update_cdf=update_cdf,
                              do_tick=do_tick, min_proc=min_proc,
-                             budget=budget)
+                             budget=budget, num_total=num_total)
 
 
 @functools.partial(jax.jit, static_argnames=("update_cdf",),
@@ -520,10 +542,10 @@ def _pop_cam_dev(state, cam):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("min_proc", "budget"),
+                   static_argnames=("min_proc", "budget", "num_total"),
                    donate_argnames=("state",))
-def _tick_dev(state, *, min_proc, budget):
-    return _tick_core_dev(state, min_proc, budget)
+def _tick_dev(state, *, min_proc, budget, num_total=None):
+    return _tick_core_dev(state, min_proc, budget, num_total)
 
 
 class ShedSession:
@@ -606,22 +628,126 @@ class ShedSession:
         self.per_camera_offered = np.zeros((self.num_cameras,), np.int64)
         self.per_camera_dropped = np.zeros((self.num_cameras,), np.int64)
         self._lane_of: Dict[Any, int] = {}
+        # unmapped lanes, a min-heap: lane() claims the smallest free
+        # lane, which reproduces the pre-churn first-seen order exactly
+        self._free_lanes: List[int] = list(range(self.num_cameras))
+        self._active_host = np.ones((self.num_cameras,), bool)
+        self._num_active = self.num_cameras
+        self._rate_floor_host = 0.0
         self._consts: Optional[Tuple[Any, Tuple[Any, Any, str]]] = None
         if train_utilities is not None:
             self.seed_cdf(train_utilities)
 
-    # -- camera lanes --------------------------------------------------------
+    # -- camera lanes / churn ------------------------------------------------
 
     def lane(self, cam_id: Any) -> int:
-        """Map an external camera id to a state lane (first-seen order)."""
+        """Map an external camera id to a state lane (first-seen order).
+
+        An unknown id claims the lowest free lane; a lane left inactive
+        by ``detach_camera`` is reset to fresh per-camera state for the
+        newcomer (an implicit ``attach_camera``)."""
         lane = self._lane_of.get(cam_id)
         if lane is None:
-            if len(self._lane_of) >= self.num_cameras:
+            if not self._free_lanes:
                 raise ValueError(
                     f"camera id {cam_id!r} exceeds the session's "
                     f"{self.num_cameras} lanes")
-            lane = self._lane_of[cam_id] = len(self._lane_of)
+            lane = heapq.heappop(self._free_lanes)
+            self._lane_of[cam_id] = lane
+            if not self._active_host[lane]:
+                self._reset_lane(lane, active=True)
+                self._active_host[lane] = True
+                self._num_active += 1
         return lane
+
+    @property
+    def num_active(self) -> int:
+        """Live camera count — Eq. 19's backend-sharing multiplier."""
+        return self._num_active
+
+    def attach_camera(self, cam_id: Any) -> int:
+        """Add a camera to a live session: claim a free lane (fresh
+        per-camera state when reclaiming a detached lane) and return
+        it. Raises when the id is already attached or no lane is free."""
+        if cam_id in self._lane_of:
+            raise ValueError(f"camera {cam_id!r} is already attached")
+        return self.lane(cam_id)
+
+    def detach_camera(self, cam_id: Any) -> List[Any]:
+        """Remove a live camera: its queued frames are drained (returned,
+        and counted as queue sheds — they will never transmit), the lane
+        is masked out of admission/control (threshold pinned to +inf,
+        Eq. 19 excludes it), and the lane is freed for reuse."""
+        lane = self._lane_of.pop(cam_id, None)
+        if lane is None:
+            raise ValueError(f"unknown camera id {cam_id!r}")
+        seq_row = np.asarray(self.state.q_seq)[lane]
+        drained = [self._payloads[lane].pop(int(s), (lane, int(s)))
+                   for s in seq_row[seq_row >= 0]]
+        self._payloads[lane] = {}
+        self.stats.dropped_queue += len(drained)
+        self.per_camera_dropped[lane] += len(drained)
+        self._reset_lane(lane, active=False)
+        heapq.heappush(self._free_lanes, lane)
+        self._active_host[lane] = False
+        self._num_active -= 1
+        return drained
+
+    def _write_lane(self, name: str, lane: int, value: Any) -> None:
+        """Set one lane row of a state leaf (host in-place; device
+        functional update, re-placed on the fleet sharding when one
+        exists)."""
+        st = self.state
+        if self.serve == "host":
+            getattr(st, name)[lane] = value
+            return
+        arr = getattr(st, name).at[lane].set(value)
+        if self._shardings is not None:
+            arr = jax.device_put(arr, self._shardings[name])
+        setattr(st, name, arr)
+
+    def _reset_lane(self, lane: int, active: bool) -> None:
+        """Fresh per-camera state for one lane. Inactive lanes park at
+        threshold=+inf (admit nothing); (re)attached lanes start at
+        -inf (admit everything) until their CDF window fills."""
+        q = self.query
+        K = self.queue_capacity
+        for name, v in (
+                ("gain", 1.0), ("cdf_len", 0), ("cdf_pos", 0),
+                ("threshold", np.float32(-np.inf if active else np.inf)),
+                ("proc_q", 0.0), ("proc_seen", False),
+                ("fps_obs", float(q.fps)), ("fps_seen", False),
+                ("queue_cap", self._queue_size), ("q_next_seq", 0),
+                ("q_util", np.full((K,), -np.inf, np.float32)),
+                ("q_seq", np.full((K,), -1, np.int32)),
+                ("rate_floor", np.float32(self._rate_floor_host)),
+                ("active", bool(active))):
+            self._write_lane(name, lane, v)
+        if self.state.bg.shape[1]:
+            self._write_lane(
+                "bg", lane,
+                np.zeros((self.state.bg.shape[1],), np.float32))
+
+    # -- degraded-mode control (serve/fault.py drives this) ------------------
+
+    @property
+    def rate_floor(self) -> float:
+        return self._rate_floor_host
+
+    def set_rate_floor(self, floor: float) -> None:
+        """Degraded-regime floor under every lane's Eq. 19 target drop
+        rate, applied at the next ``tick``/``step``. 0.0 restores the
+        normal regime bit-identically (``max(r, 0)`` is the identity on
+        the clipped rates)."""
+        f = float(floor)
+        if not 0.0 <= f <= 1.0:
+            raise ValueError(f"rate floor {f} outside [0, 1]")
+        self._rate_floor_host = f
+        xp = self._xp
+        val = xp.full((self.num_cameras,), f, xp.float32)
+        if self._shardings is not None:
+            val = jax.device_put(val, self._shardings["rate_floor"])
+        self.state.rate_floor = val
 
     @property
     def _budget(self) -> float:
@@ -762,7 +888,8 @@ class ShedSession:
         if (frames is None) == (utilities is None):
             raise ValueError("pass exactly one of frames= or utilities=")
         kw = dict(update_cdf=self.update_cdf_online, do_tick=bool(tick),
-                  min_proc=self.min_proc, budget=self._budget)
+                  min_proc=self.min_proc, budget=self._budget,
+                  num_total=self._num_active)
         if frames is not None:
             if self.model is None:
                 raise ValueError("step(frames=...) needs a trained model "
@@ -791,7 +918,7 @@ class ShedSession:
                     from repro.core import fleet as _fleet
                     self.state, out, agg = _fleet.serve_step(
                         self.state, flat, M_pos, norm, mesh=self.mesh,
-                        axis=self._cam_axis, num_total=self.num_cameras,
+                        axis=self._cam_axis,
                         aggregate=self.fleet_aggregate, **ingest_kw, **kw)
                     self._absorb_fleet(agg)
                 else:
@@ -816,7 +943,6 @@ class ShedSession:
                 self.state, out, agg = _fleet.control_step(
                     self.state, jnp.asarray(util, jnp.float32),
                     mesh=self.mesh, axis=self._cam_axis,
-                    num_total=self.num_cameras,
                     aggregate=self.fleet_aggregate, **kw)
                 self._absorb_fleet(agg)
             else:
@@ -999,14 +1125,14 @@ class ShedSession:
                 batch_items[c][t] = items[i]
                 slot_of[(c, t)] = i
         kw = dict(update_cdf=self.update_cdf_online, do_tick=False,
-                  min_proc=self.min_proc, budget=self._budget)
+                  min_proc=self.min_proc, budget=self._budget,
+                  num_total=self._num_active)
         if self.serve == "device":
             if self.mesh is not None:
                 from repro.core import fleet as _fleet
                 self.state, out, agg = _fleet.control_step(
                     self.state, jnp.asarray(util), jnp.asarray(present),
                     mesh=self.mesh, axis=self._cam_axis,
-                    num_total=self.num_cameras,
                     aggregate=self.fleet_aggregate, **kw)
                 self._absorb_fleet(agg)
             else:
@@ -1117,15 +1243,17 @@ class ShedSession:
                 from repro.core import fleet as _fleet
                 self.state, rates, resize_ev = _fleet.tick(
                     self.state, mesh=self.mesh, axis=self._cam_axis,
-                    num_total=self.num_cameras, min_proc=self.min_proc,
+                    num_total=self._num_active, min_proc=self.min_proc,
                     budget=self._budget)
             else:
                 self.state, rates, resize_ev = _tick_dev(
-                    self.state, min_proc=self.min_proc, budget=self._budget)
+                    self.state, min_proc=self.min_proc, budget=self._budget,
+                    num_total=self._num_active)
             rates, resize_ev = np.asarray(rates), np.asarray(resize_ev)
         else:
             rates, resize_ev = _tick_core_host(
-                self.state, self.min_proc, self._budget)
+                self.state, self.min_proc, self._budget,
+                num_total=self._num_active)
         cnt = (resize_ev >= 0).sum(axis=1)
         self.stats.dropped_queue += int(cnt.sum())
         self.per_camera_dropped += cnt
@@ -1138,8 +1266,12 @@ class ShedSession:
         # physical (C, K) lane bound the queues actually honor
         queue_cap = np.minimum(np.asarray(st.queue_cap), self.queue_capacity)
         finite = np.isfinite(threshold)
+        # aggregate over LIVE lanes only — detached lanes carry rate 0 /
+        # threshold +inf and would skew the means (all-active: identical)
+        act = self._active_host
         return {
-            "target_drop_rate": float(rates.mean()),
+            "target_drop_rate": float(rates[act].mean()) if act.any()
+            else 0.0,
             "threshold": float(threshold[finite].mean()) if finite.any()
             else -np.inf,
             "queue_size": int(queue_cap.max()),
@@ -1183,6 +1315,13 @@ class ShedSession:
             "npix": int(self.state.bg.shape[1]),
             "has_model": self.model is not None,
             "model_op": self.model.op if self.model is not None else "",
+            # camera-id -> lane map, restored so a resumed session keeps
+            # serving the same external ids (ids must be msgpack-able —
+            # ints/strings; np ints are coerced)
+            "lane_map": [[int(k) if isinstance(k, (int, np.integer))
+                          else k, int(v)]
+                         for k, v in sorted(self._lane_of.items(),
+                                            key=lambda kv: kv[1])],
         }
         tree = {**self.state.as_dict(), **self._model_arrays()}
         return ckpt.save(path, step, tree, metadata=meta, async_=async_)
@@ -1222,6 +1361,18 @@ class ShedSession:
                 np.asarray(out["model_M_neg"]),
                 np.asarray(out["model_norm"]),
                 meta.get("model_op") or self.query.op)
+        # rebuild the churn bookkeeping from the restored state + meta
+        lane_map = meta.get("lane_map")
+        if lane_map is not None:
+            self._lane_of = {k: int(v) for k, v in lane_map}
+            used = set(self._lane_of.values())
+            self._free_lanes = [l for l in range(self.num_cameras)
+                                if l not in used]
+            heapq.heapify(self._free_lanes)
+        self._active_host = np.asarray(self.state.active, bool).copy()
+        self._num_active = int(self._active_host.sum())
+        floors = np.asarray(self.state.rate_floor)
+        self._rate_floor_host = float(floors.max()) if floors.size else 0.0
         return step, meta
 
 

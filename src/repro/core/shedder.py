@@ -67,6 +67,11 @@ class LoadShedder:
     def report_ingress_fps(self, fps: float):
         self.control.report_ingress_fps(fps)
 
+    def set_rate_floor(self, floor: float) -> None:
+        """Degraded-mode floor under the Eq. 19 target drop rate
+        (applied at the next tick); 0.0 restores the normal regime."""
+        self.control.set_rate_floor(floor)
+
     # -- scoring ------------------------------------------------------------
     def utility_of(self, pf) -> float:
         assert self.model is not None, "no utility model configured"

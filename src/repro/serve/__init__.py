@@ -4,7 +4,24 @@
 # per-stage metrics). Both drive the same ShedSession serving surface,
 # so QoR/violation results are directly comparable.
 from repro.serve.clock import Clock, VirtualClock, WallClock
-from repro.serve.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.serve.fault import (
+    BackendError,
+    BackendTimeout,
+    BackendUnavailable,
+    BreakerConfig,
+    CircuitBreaker,
+    DegradedConfig,
+    FaultyBackend,
+    ResilienceConfig,
+    RetryPolicy,
+)
+from repro.serve.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    StateGauge,
+)
 from repro.serve.service import (
     Arrival,
     IngestCoalescer,
@@ -28,9 +45,12 @@ from repro.serve.transport import (
 )
 
 __all__ = [
-    "Arrival", "Backend", "BackendProfile", "CallableBackend", "Clock",
-    "Counter", "Gauge", "Histogram", "IngestCoalescer", "MetricsRegistry",
-    "MockBackend", "PipelineSimulator", "ProcessedFrame", "SenderWorker",
-    "ServeService", "ServiceResult", "ServedFrame", "SimResult",
-    "VirtualClock", "WallClock", "arrivals_from_records", "as_backend",
+    "Arrival", "Backend", "BackendError", "BackendProfile", "BackendTimeout",
+    "BackendUnavailable", "BreakerConfig", "CallableBackend",
+    "CircuitBreaker", "Clock", "Counter", "DegradedConfig", "FaultyBackend",
+    "Gauge", "Histogram", "IngestCoalescer", "MetricsRegistry",
+    "MockBackend", "PipelineSimulator", "ProcessedFrame", "ResilienceConfig",
+    "RetryPolicy", "SenderWorker", "ServeService", "ServiceResult",
+    "ServedFrame", "SimResult", "StateGauge", "VirtualClock", "WallClock",
+    "arrivals_from_records", "as_backend",
 ]

@@ -59,6 +59,25 @@ class Gauge:
             self.max = self.value
 
 
+class StateGauge:
+    """Categorical gauge: a current state string plus a per-state
+    transition counter (how many times each state was *entered*) — the
+    breaker's open/half-open/close churn in one instrument."""
+
+    __slots__ = ("name", "value", "transitions")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.value = ""
+        self.transitions: Dict[str, int] = {}
+
+    def set(self, state: str, count: bool = True) -> None:
+        state = str(state)
+        if state != self.value and count:
+            self.transitions[state] = self.transitions.get(state, 0) + 1
+        self.value = state
+
+
 class Histogram:
     """Exact-sample histogram with a bounded buffer.
 
@@ -121,6 +140,7 @@ class MetricsRegistry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, Histogram] = {}
+        self._states: Dict[str, StateGauge] = {}
         self.derived: Dict[str, Any] = {}
 
     def counter(self, name: str) -> Counter:
@@ -141,10 +161,16 @@ class MetricsRegistry:
             h = self._hists[name] = Histogram(name, cap)
         return h
 
+    def state_gauge(self, name: str) -> StateGauge:
+        s = self._states.get(name)
+        if s is None:
+            s = self._states[name] = StateGauge(name)
+        return s
+
     # -- export --------------------------------------------------------------
 
     def snapshot(self) -> Dict[str, Any]:
-        return {
+        snap = {
             "counters": {k: c.value for k, c in sorted(self._counters.items())},
             "gauges": {k: {"value": g.value, "max": g.max}
                        for k, g in sorted(self._gauges.items())},
@@ -152,6 +178,13 @@ class MetricsRegistry:
                            for k, h in sorted(self._hists.items())},
             "derived": dict(sorted(self.derived.items())),
         }
+        if self._states:       # only present when a state gauge exists,
+            # so pre-existing snapshots stay byte-identical
+            snap["states"] = {
+                k: {"value": s.value,
+                    "transitions": dict(sorted(s.transitions.items()))}
+                for k, s in sorted(self._states.items())}
+        return snap
 
     def to_json(self, path: Union[str, Path]) -> Path:
         path = Path(path)
@@ -171,6 +204,10 @@ class MetricsRegistry:
         for k, h in snap["histograms"].items():
             for f, v in h.items():
                 rows.append(f"{k},histogram,{f},{v!r}")
+        for k, s in snap.get("states", {}).items():
+            rows.append(f"{k},state,value,{s['value']}")
+            for f, v in s["transitions"].items():
+                rows.append(f"{k},state,enter_{f},{v!r}")
         for k, v in snap["derived"].items():
             rows.append(f"{k},derived,value,{v!r}")
         path = Path(path)
@@ -189,6 +226,9 @@ class MetricsRegistry:
             lines.append(f"{k:32s} {_fmt(v)}")
         for k, g in snap["gauges"].items():
             lines.append(f"{k:32s} {_fmt(g['value'])} (max {_fmt(g['max'])})")
+        for k, s in snap.get("states", {}).items():
+            trans = " ".join(f"{f}x{v}" for f, v in s["transitions"].items())
+            lines.append(f"{k:32s} {s['value']} ({trans})")
         for k, h in snap["histograms"].items():
             if h["count"] == 0:
                 continue
@@ -205,4 +245,4 @@ def _fmt(v: Any) -> str:
     return str(v)
 
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "StateGauge"]

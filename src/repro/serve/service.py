@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import queue as _queue
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -44,13 +45,16 @@ import numpy as np
 
 from repro.core.control import LatencyInputs
 from repro.serve.clock import Clock, VirtualClock, WallClock
+from repro.serve.fault import CLOSED, ResilienceConfig
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.transport import SenderWorker, SendOutcome
 
 # event kinds — the tuple ordering makes same-instant processing
 # deterministic: arrivals land in the window before its deadline fires,
-# completions free tokens before control re-derives thresholds
-EVT_ARRIVE, EVT_DONE, EVT_FLUSH, EVT_CTRL = 0, 1, 2, 3
+# completions free tokens before control re-derives thresholds; sender
+# wake-ups (retry-ready / breaker probe windows) come last so freed
+# tokens and fresh thresholds are visible when the sender re-pumps
+EVT_ARRIVE, EVT_DONE, EVT_FLUSH, EVT_CTRL, EVT_WAKE = 0, 1, 2, 3, 4
 
 
 @dataclass(frozen=True)
@@ -205,6 +209,7 @@ class ServeService:
                  expire_in_queue: bool = True,
                  per_camera_latency: bool = False,
                  latency_inputs: Optional[LatencyInputs] = None,
+                 resilience: Optional[ResilienceConfig] = None,
                  metrics: Optional[MetricsRegistry] = None) -> None:
         self.session = session
         # feed each completion's measured latency into its own camera's
@@ -222,12 +227,30 @@ class ServeService:
         self.coalescer = IngestCoalescer(
             self.num_cameras, max_batch=max_batch, max_wait=max_wait,
             metrics=self.metrics)
+        self.resilience = resilience
         self.sender = SenderWorker(
             session, backend, tokens=tokens, latency_inputs=self.li,
-            expire_in_queue=expire_in_queue, metrics=self.metrics)
+            expire_in_queue=expire_in_queue, metrics=self.metrics,
+            retry=resilience.retry if resilience else None,
+            breaker=resilience.breaker if resilience else None,
+            send_deadline=resilience.send_deadline if resilience else None)
         self._seq = itertools.count()
         self._heap: List[Tuple[float, int, int, Any]] = []
         self._epoch = 0
+        # live push API: foreign threads submit() here; the event loop
+        # transfers to the heap between events
+        self._ingress: "_queue.SimpleQueue[Arrival]" = _queue.SimpleQueue()
+        self._stopped = False
+        self._t_start: Optional[float] = None
+        self._stats0 = (0, 0, 0, 0)
+        self._ctrl_scheduled = False
+        self._pending_wake: Optional[float] = None
+        self._rate_floor = 0.0
+        self._degraded_time = 0.0
+        self._arrival_times: List[float] = []
+        self._offered: List[Any] = []
+        self._processed: List[ServedFrame] = []
+        self._trace: List[dict] = []
 
     # -- lane mapping --------------------------------------------------------
 
@@ -247,6 +270,11 @@ class ServeService:
     def _on_arrive(self, now: float, a: Arrival) -> None:
         self.metrics.counter("ingest.arrivals").inc()
         self._arrival_times.append(now)
+        if not self._ctrl_scheduled:
+            # the control chain parked itself when the loop went idle
+            # (replay runs never hit this mid-run) — re-arm it
+            self._push(now + self.control_period, EVT_CTRL, None)
+            self._ctrl_scheduled = True
         was_empty = self.coalescer.count == 0
         full = self.coalescer.add(
             self._lane(a.cam), a.record, a.utility, a.frame, now)
@@ -278,9 +306,9 @@ class ServeService:
             sess.step(frames=frames, items=items, tick=False)
             m.counter("dispatch.fused").inc()
         else:
-            recs, utils = [], []
-            for lane in batch.per_cam:
-                for e in lane:
+            recs, utils, lanes = [], [], []
+            for li, entries in enumerate(batch.per_cam):
+                for e in entries:
                     if e.utility is None:
                         raise ValueError(
                             "arrival without a utility can only be served "
@@ -288,11 +316,20 @@ class ServeService:
                             "raw frames + a trained model)")
                     recs.append(e.record)
                     utils.append(e.utility)
+                    lanes.append(li)
             offer_batch = getattr(sess, "offer_batch", None)
+            # the coalescer already bucketed by Arrival.cam — pass its
+            # lanes through rather than re-deriving from record.cam_id,
+            # so a stream resubmitted under a new camera id (churn)
+            # lands on the new id's lane
             if offer_batch is not None and len(recs) > 1:
-                offer_batch(recs, utils)
+                offer_batch(recs, utils, cams=lanes)
                 m.counter("dispatch.batched").inc()
-            else:
+            elif getattr(sess, "lane", None) is not None:
+                for r, u, c in zip(recs, utils, lanes):
+                    sess.offer(r, u, cam=c)
+                m.counter("dispatch.sequential").inc(len(recs))
+            else:                      # single-queue LoadShedder surface
                 for r, u in zip(recs, utils):
                     sess.offer(r, u)
                 m.counter("dispatch.sequential").inc(len(recs))
@@ -307,9 +344,21 @@ class ServeService:
     def _pump(self, now: float) -> None:
         for o in self.sender.pump(now):
             self._push(o.t_done, EVT_DONE, o)
+        wake = self.sender.next_wakeup(now)
+        if wake is not None and (self._pending_wake is None
+                                 or wake < self._pending_wake):
+            self._pending_wake = wake
+            self._push(wake, EVT_WAKE, None)
 
     def _on_done(self, now: float, o: SendOutcome) -> None:
-        self.sender.complete()
+        if not o.ok:
+            # failed send: complete() records the frame's fate (retry
+            # schedule or transport shed) along with the token return
+            self.sender.complete(o, now)
+            self.metrics.counter("backend.failed").inc()
+            self._pump(now)
+            return
+        self.sender.complete(o, now)
         t_gen = getattr(o.item, "t_gen", o.t_sent)
         e2e = now - t_gen
         self._processed.append(ServedFrame(o.item, o.t_sent, now,
@@ -328,6 +377,37 @@ class ServeService:
             self.session.report_backend_latency(o.latency)
         self._pump(now)
 
+    def _update_degraded(self, now: float) -> None:
+        """Degraded-regime controller: ramp a rate floor under the
+        Eq. 19 targets while the breaker is not CLOSED or the measured
+        backend latency alone blows the E2E budget; ramp back down
+        (asymmetric, oscillation-free) once half-open probes succeed.
+        A floor of exactly 0.0 never touches the session, so the
+        zero-fault path stays bit-identical."""
+        cfg = self.resilience.degraded
+        br = self.sender.breaker
+        unhealthy = br is not None and br.state != CLOSED
+        if not unhealthy and cfg.on_latency:
+            exp = (self.session.expected_proc() + self.li.net_ls_q
+                   + self.li.net_cam_ls + self.li.proc_cam)
+            unhealthy = exp > (self.session.latency_bound
+                               * cfg.latency_factor)
+        target = cfg.max_drop if unhealthy else 0.0
+        f = self._rate_floor
+        f += (cfg.ramp_up if target > f else cfg.ramp_down) * (target - f)
+        if target == 0.0 and f < cfg.snap_eps:
+            f = 0.0
+        if f != self._rate_floor or f > 0.0:
+            set_floor = getattr(self.session, "set_rate_floor", None)
+            if set_floor is not None:
+                set_floor(f)
+        self._rate_floor = f
+        if f > 0.0:
+            self._degraded_time += self.control_period
+        m = self.metrics
+        m.gauge("control.rate_floor").set(f)
+        m.gauge("control.degraded").set(1.0 if f > 0.0 else 0.0)
+
     def _on_control(self, now: float) -> None:
         cutoff = now - self.fps_window
         self._arrival_times[:] = [t for t in self._arrival_times
@@ -335,6 +415,8 @@ class ServeService:
         if self._arrival_times:
             self.session.report_ingress_fps(
                 len(self._arrival_times) / self.fps_window)
+        if self.resilience is not None:
+            self._update_degraded(now)
         snap = self.session.tick()
         snap["t"] = now
         snap["proc_q"] = self.session.expected_proc()
@@ -347,9 +429,12 @@ class ServeService:
             m.gauge("control.threshold").set(th)
         pending = (self.coalescer.count > 0
                    or self.sender.free < self.sender.tokens
+                   or self.sender.pending_retries > 0
                    or any(k != EVT_CTRL for _, k, _, _ in self._heap))
         if pending:
             self._push(now + self.control_period, EVT_CTRL, None)
+        else:
+            self._ctrl_scheduled = False
 
     def _observe_queue_depth(self) -> int:
         depths = getattr(self.session, "queue_depths", None)
@@ -361,27 +446,77 @@ class ServeService:
 
     # -- the runtime ---------------------------------------------------------
 
-    def run(self, arrivals: Iterable[Arrival]) -> ServiceResult:
+    def reset(self) -> None:
+        """Clear per-run state so ``submit``/``drain``/``finalize`` can
+        start a fresh run (``run`` calls this for you)."""
         self._heap = []
         self._seq = itertools.count()
-        self._arrival_times: List[float] = []
-        self._offered: List[Any] = []
-        self._processed: List[ServedFrame] = []
-        self._trace: List[dict] = []
+        self._arrival_times = []
+        self._offered = []
+        self._processed = []
+        self._trace = []
         self._epoch = 0
-        stats0 = (self.session.stats.offered,
-                  self.session.stats.dropped_admission,
-                  self.session.stats.dropped_queue,
-                  self.session.stats.sent)
-        for a in arrivals:
+        self._stopped = False
+        self._t_start = None
+        self._ctrl_scheduled = False
+        self._pending_wake = None
+        self._degraded_time = 0.0
+        self._stats0 = (self.session.stats.offered,
+                        self.session.stats.dropped_admission,
+                        self.session.stats.dropped_queue,
+                        self.session.stats.sent)
+
+    def submit(self, arrival: Arrival) -> None:
+        """Enqueue one arrival into the (possibly running) event loop.
+
+        Thread-safe: capture loops call this from foreign threads while
+        ``drain(wait=True)`` runs the loop; the runtime transfers
+        submissions onto the event heap between events. Before a drain
+        starts, submissions simply stage the run's arrival list."""
+        self._ingress.put(arrival)
+
+    def stop(self) -> None:
+        """Make a ``drain(wait=True)`` return once the heap empties
+        instead of blocking for more submissions."""
+        self._stopped = True
+
+    def _transfer_ingress(self) -> None:
+        while True:
+            try:
+                a = self._ingress.get_nowait()
+            except _queue.Empty:
+                return
             self._push(a.t, EVT_ARRIVE, a)
-        if not self._heap:
-            return ServiceResult([], [], [], 0, self.metrics.snapshot(), [])
-        t_start = self._heap[0][0]
-        self.clock.sleep_until(t_start)
-        self._push(t_start + self.control_period, EVT_CTRL, None)
-        while self._heap:
+
+    def drain(self, *, wait: bool = False, poll: float = 0.05) -> None:
+        """Run the event loop until the heap and ingress queue empty.
+
+        ``wait=True`` keeps the loop alive when idle, blocking up to
+        ``poll`` seconds at a time for live submissions until ``stop()``
+        is called — the wall-clock serving mode."""
+        self._transfer_ingress()
+        while True:
+            if not self._heap:
+                if wait and not self._stopped:
+                    try:
+                        a = self._ingress.get(timeout=poll)
+                    except _queue.Empty:
+                        continue
+                    self._push(a.t, EVT_ARRIVE, a)
+                    self._transfer_ingress()
+                    continue
+                self._transfer_ingress()
+                if not self._heap:
+                    return
             t, kind, _, payload = heapq.heappop(self._heap)
+            if self._t_start is None:
+                # first event of the run: anchor the clock and schedule
+                # the control chain (exactly the pre-refactor ordering —
+                # the CTRL push follows every staged arrival push)
+                self._t_start = t
+                self.clock.sleep_until(t)
+                self._push(t + self.control_period, EVT_CTRL, None)
+                self._ctrl_scheduled = True
             self.clock.sleep_until(t)
             now = self.clock.now()
             if kind == EVT_ARRIVE:
@@ -391,18 +526,32 @@ class ServeService:
             elif kind == EVT_FLUSH:
                 if payload == self._epoch:
                     self._flush(now)
-            else:
+            elif kind == EVT_CTRL:
                 self._on_control(now)
-        return self._finalize(t_start, stats0)
+            else:                       # EVT_WAKE
+                self._pending_wake = None
+                self._pump(now)
+            self._transfer_ingress()
 
-    def _finalize(self, t_start: float,
-                  stats0: Tuple[int, int, int, int]) -> ServiceResult:
+    def run(self, arrivals: Iterable[Arrival]) -> ServiceResult:
+        """Replay a prepared arrival list: reset + submit + drain +
+        finalize (the live push API is the same loop fed by foreign
+        threads)."""
+        self.reset()
+        for a in arrivals:
+            self.submit(a)
+        self.drain()
+        return self.finalize()
+
+    def finalize(self) -> ServiceResult:
+        if self._t_start is None:       # nothing ever arrived
+            return ServiceResult([], [], [], 0, self.metrics.snapshot(), [])
         processed_ids = {id(p.record) for p in self._processed}
         kept_mask = [id(r) in processed_ids for r in self._offered]
         lb = self.session.latency_bound
         violations = sum(1 for p in self._processed if p.e2e > lb)
         m = self.metrics
-        elapsed = max(self.clock.now() - t_start, 1e-9)
+        elapsed = max(self.clock.now() - self._t_start, 1e-9)
         n_off = len(self._offered)
         n_proc = len(self._processed)
         st = self.session.stats
@@ -413,15 +562,20 @@ class ServeService:
             "processed": n_proc,
             "shed_rate": 1.0 - n_proc / max(1, n_off),
             "shed_admission_rate":
-                (st.dropped_admission - stats0[1]) / max(1, n_off),
+                (st.dropped_admission - self._stats0[1]) / max(1, n_off),
             "violation_rate": violations / max(1, n_proc),
             "backend_utilization":
                 m.counter("backend.busy_s").value / (elapsed * self.tokens),
         })
+        if self.resilience is not None:
+            m.derived["degraded_time_fraction"] = (
+                self._degraded_time / elapsed)
+            m.derived["transport_shed"] = (
+                m.counter("sender.transport_shed").value)
         return ServiceResult(self._processed, self._offered, kept_mask,
                              violations, m.snapshot(), self._trace)
 
 
 __all__ = ["Arrival", "CoalescedBatch", "IngestCoalescer", "ServeService",
            "ServiceResult", "ServedFrame", "arrivals_from_records",
-           "EVT_ARRIVE", "EVT_DONE", "EVT_FLUSH", "EVT_CTRL"]
+           "EVT_ARRIVE", "EVT_DONE", "EVT_FLUSH", "EVT_CTRL", "EVT_WAKE"]

@@ -1,0 +1,378 @@
+"""Transport resilience: fault injection, retries/backoff, the circuit
+breaker, degraded-mode control, and the zero-fault bit-parity contract.
+
+Everything runs under the virtual clock, so fault scenarios are exact:
+a seeded FaultyBackend run produces the same failures, retries, breaker
+transitions and sheds on every repeat.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+
+from repro.core import Query, RED, open_session
+from repro.serve import (
+    Arrival,
+    BackendError,
+    BackendTimeout,
+    BackendUnavailable,
+    BreakerConfig,
+    CircuitBreaker,
+    DegradedConfig,
+    FaultyBackend,
+    MockBackend,
+    ResilienceConfig,
+    RetryPolicy,
+    SenderWorker,
+    ServeService,
+    VirtualClock,
+)
+from repro.serve.fault import CLOSED, HALF_OPEN, OPEN
+from repro.serve.metrics import MetricsRegistry
+
+FPS = 10.0
+
+
+@dataclass(frozen=True)
+class Rec:
+    cam_id: int
+    frame_idx: int
+    t_gen: float
+    busy: bool = False
+
+
+def _session(C=1, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return open_session(
+        Query.single(RED, latency_bound=1.0, fps=FPS), num_cameras=C,
+        train_utilities=rng.random(512).astype(np.float32), **kw)
+
+
+def _arrivals(C=1, n=60, seed=0, fps=FPS):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        t = i / fps
+        for c in range(C):
+            out.append(Arrival(t=t, cam=c, record=Rec(c, i, t),
+                               utility=float(rng.random())))
+    return out
+
+
+def _service(sess, backend, **kw):
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait", 0.05)
+    return ServeService(sess, backend, **kw)
+
+
+def _timeline(res):
+    return [(p.record.cam_id, p.record.frame_idx, p.t_sent, p.t_done,
+             p.backend_latency) for p in res.processed]
+
+
+# -- FaultyBackend -----------------------------------------------------------
+
+def test_faulty_backend_seeded_determinism():
+    """Two runs with the same fault seed produce identical decisions,
+    timelines and metric snapshots — fault injection is replayable."""
+    def one_run():
+        backend = FaultyBackend(
+            MockBackend(filter_latency=0.05, dnn_latency=0.05, jitter=0.0),
+            seed=7, error_rate=0.25, timeout_rate=0.1,
+            spike_rate=0.1, spike_factor=5.0)
+        svc = _service(_session(C=1), backend,
+                       resilience=ResilienceConfig(
+                           retry=RetryPolicy(max_retries=2, seed=3),
+                           breaker=BreakerConfig(failure_threshold=4,
+                                                 reset_timeout=0.3)))
+        res = svc.run(_arrivals(C=1, n=50))
+        return (res.kept_mask, _timeline(res),
+                json.dumps(res.metrics, sort_keys=True))
+    assert one_run() == one_run()
+
+
+def test_faulty_backend_outage_window_keys_on_service_time():
+    b = FaultyBackend(MockBackend(jitter=0.0), seed=0,
+                      outages=((2.0, 0.5),))
+    b.observe_time(1.9)
+    assert not b.in_outage()
+    b.process(Rec(0, 0, 0.0))                   # healthy before the window
+    b.observe_time(2.2)
+    assert b.in_outage()
+    with pytest.raises(BackendUnavailable):
+        b.process(Rec(0, 1, 0.0))
+    b.observe_time(2.5)                         # [start, start+dur) is open
+    assert not b.in_outage()
+
+
+def test_faulty_backend_draw_count_is_rate_invariant():
+    """Enabling one fault type never perturbs when the others fire:
+    every non-outage call draws exactly three uniforms, so the calls
+    that spike are the same whether or not errors are also injected."""
+    def spike_pattern(error_rate):
+        b = FaultyBackend(MockBackend(jitter=0.0), seed=9,
+                          error_rate=error_rate, spike_rate=0.5,
+                          spike_factor=10.0)
+        out = []
+        for i in range(40):
+            try:
+                out.append(b.process(Rec(0, i, 0.0)) > 0.01)
+            except BackendError:     # error draw fired instead
+                out.append(None)
+        return out
+    clean = spike_pattern(0.0)
+    noisy = spike_pattern(0.4)
+    assert any(v is None for v in noisy)       # errors actually fired
+    assert any(v for v in clean)               # spikes actually fired
+    # wherever the noisy run didn't raise, its spike flag matches
+    assert all(c == n for c, n in zip(clean, noisy) if n is not None)
+
+
+# -- retry policy ------------------------------------------------------------
+
+def test_retry_backoff_schedule_bounds():
+    pol = RetryPolicy(max_retries=5, backoff_base=0.05, backoff_factor=2.0,
+                      backoff_max=0.4, jitter=0.1, seed=0)
+    rng = np.random.default_rng(0)
+    for attempt in range(8):
+        lo = min(0.05 * 2.0 ** attempt, 0.4)
+        for _ in range(10):
+            d = pol.backoff(attempt, rng)
+            assert lo <= d <= lo * 1.1     # jitter only ever adds, bounded
+    # no rng -> the deterministic schedule exactly
+    assert pol.backoff(0) == 0.05
+    assert pol.backoff(3) == 0.4           # capped at backoff_max
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+def test_breaker_open_half_open_close_cycle():
+    m = MetricsRegistry()
+    br = CircuitBreaker(BreakerConfig(failure_threshold=3,
+                                      reset_timeout=1.0), metrics=m)
+    assert br.state == CLOSED and br.can_send(0.0)
+    br.on_failure(0.1)
+    br.on_failure(0.2)
+    assert br.state == CLOSED              # below threshold
+    br.on_failure(0.3)
+    assert br.state == OPEN
+    assert not br.can_send(0.5)            # reset_timeout not elapsed
+    assert br.can_send(1.3)                # lapses into HALF_OPEN
+    assert br.state == HALF_OPEN
+    br.on_send(1.3)
+    assert not br.can_send(1.3)            # single probe in flight
+    br.on_failure(1.4)                     # probe failed -> re-open
+    assert br.state == OPEN
+    assert br.can_send(2.5)
+    br.on_send(2.5)
+    br.on_success(2.6)                     # probe succeeded -> close
+    assert br.state == CLOSED and br.failures == 0
+    trans = m.state_gauge("breaker.state").transitions
+    assert trans["open"] == 2 and trans["half_open"] == 2
+    assert trans["closed"] == 1            # initial set is not a transition
+
+
+def test_breaker_success_resets_failure_streak():
+    br = CircuitBreaker(BreakerConfig(failure_threshold=3))
+    br.on_failure(0.1)
+    br.on_failure(0.2)
+    br.on_success(0.3)
+    br.on_failure(0.4)
+    br.on_failure(0.5)
+    assert br.state == CLOSED              # streak broken, never tripped
+
+
+# -- sender failure semantics ------------------------------------------------
+
+class _AlwaysRaises:
+    def process(self, item):
+        raise ValueError("backend blew up")
+
+
+def test_raising_backend_cannot_leak_tokens():
+    """The in-flight accounting fix: an exception inside
+    ``Backend.process`` surfaces as a failed outcome whose completion
+    returns the token, and the frame's fate is recorded (shed here —
+    no retry policy), so the sender is never starved."""
+    sess = _session(C=1)
+    worker = SenderWorker(sess, _AlwaysRaises(), tokens=1)
+    for i in range(3):
+        t = float(i)
+        assert sess.offer(Rec(0, i, t), 0.9) == "queued"
+        outs = worker.pump(t)
+        assert len(outs) == 1 and not outs[0].ok
+        assert outs[0].error == "error"
+        assert worker.free == 0            # token held until completion
+        assert worker.complete(outs[0], outs[0].t_done) is None
+        assert worker.free == 1            # token returned, frame shed
+    assert sess.stats.sent == 0            # every pop was reverted
+    assert sess.stats.dropped_queue == 3
+    assert worker.metrics.counter("sender.transport_shed").value == 3
+    assert worker.metrics.counter("sender.failures").value == 3
+
+
+def test_send_deadline_turns_slow_sends_into_timeouts():
+    sess = _session(C=1)
+    worker = SenderWorker(
+        sess, MockBackend(filter_latency=0.5, dnn_latency=0.5, jitter=0.0),
+        tokens=1, send_deadline=0.2)
+    sess.offer(Rec(0, 0, 0.0), 0.9)
+    (o,) = worker.pump(0.0)
+    assert not o.ok and o.error == "timeout"
+    assert o.latency == pytest.approx(0.2)  # token held for the deadline
+    assert worker.metrics.counter("sender.fail.timeout").value == 1
+
+
+def test_failed_sends_retry_with_backoff_then_shed():
+    sess = _session(C=1)
+    pol = RetryPolicy(max_retries=2, backoff_base=0.1, backoff_factor=2.0,
+                      backoff_max=1.0, jitter=0.0, seed=0)
+    worker = SenderWorker(sess, _AlwaysRaises(), tokens=1, retry=pol)
+    sess.offer(Rec(0, 0, 0.0), 0.9)
+    (o1,) = worker.pump(0.0)
+    ready1 = worker.complete(o1, 0.01)
+    assert ready1 == pytest.approx(0.11)   # now + base
+    assert worker.pending_retries == 1
+    assert worker.pump(0.05) == []         # not ready yet
+    (o2,) = worker.pump(ready1)
+    assert o2.attempts == 1
+    ready2 = worker.complete(o2, ready1 + 0.01)
+    assert ready2 == pytest.approx(ready1 + 0.01 + 0.2)   # base * factor
+    (o3,) = worker.pump(ready2)
+    assert o3.attempts == 2
+    assert worker.complete(o3, ready2 + 0.01) is None     # budget exhausted
+    assert worker.pending_retries == 0
+    assert sess.stats.dropped_queue == 1 and sess.stats.sent == 0
+    assert worker.metrics.counter("sender.retries").value == 2
+    assert worker.metrics.counter("sender.transport_shed").value == 1
+
+
+# -- zero-fault equivalence (acceptance criterion) ---------------------------
+
+def test_zero_fault_resilience_is_bit_identical_to_plain_service():
+    """Resilience fully configured but no fault ever fires: decisions,
+    timeline and trace must be bit-identical to the plain service."""
+    arrivals = _arrivals(C=2, n=60)
+    plain = _service(_session(C=2), MockBackend(seed=0))
+    res_plain = plain.run(arrivals)
+    resilient = _service(
+        _session(C=2), FaultyBackend(MockBackend(seed=0), seed=1),
+        resilience=ResilienceConfig())
+    res_res = resilient.run(arrivals)
+    assert res_plain.kept_mask == res_res.kept_mask
+    assert _timeline(res_plain) == _timeline(res_res)
+    assert json.dumps(res_plain.trace, sort_keys=True) == \
+        json.dumps(res_res.trace, sort_keys=True)
+    assert res_res.metrics["derived"]["degraded_time_fraction"] == 0.0
+    assert res_res.metrics["derived"]["transport_shed"] == 0
+    assert res_res.metrics["states"]["breaker.state"]["value"] == "closed"
+
+
+# -- outage + recovery (acceptance criterion) --------------------------------
+
+def test_outage_sheds_at_transport_and_recovers():
+    """A 10%-of-runtime outage: the service sheds at the transport
+    instead of deadlocking, the breaker re-closes after recovery, and
+    every *delivered* frame stays inside the E2E budget."""
+    sess = _session(C=1)
+    backend = FaultyBackend(
+        MockBackend(filter_latency=0.08, dnn_latency=0.08, jitter=0.0),
+        seed=0, outages=((2.0, 0.6),))     # 0.6s of a 6s trace
+    svc = _service(sess, backend, resilience=ResilienceConfig(
+        retry=RetryPolicy(max_retries=2, backoff_base=0.05,
+                          backoff_max=0.2, jitter=0.1, seed=1),
+        breaker=BreakerConfig(failure_threshold=3, reset_timeout=0.1)))
+    res = svc.run(_arrivals(C=1, n=60))    # returning at all == no deadlock
+    c = res.metrics["counters"]
+    assert c["sender.fail.unavailable"] > 0
+    assert c["sender.retries"] > 0
+    assert c["sender.transport_shed"] > 0  # retry budgets expired -> shed
+    trans = res.metrics["states"]["breaker.state"]
+    assert trans["transitions"]["open"] >= 1
+    assert trans["value"] == "closed"      # re-closed after recovery
+    assert len(res.processed) > 30         # service kept delivering
+    e2e = res.e2e_latencies()
+    assert float(np.percentile(e2e, 99)) <= sess.latency_bound + 1e-9
+    assert res.metrics["derived"]["degraded_time_fraction"] > 0.0
+    # the books still balance: every offered frame is processed, queued,
+    # or shed (admission + queue/transport)
+    st = sess.stats
+    assert st.offered == st.dropped_admission + st.dropped_queue + \
+        st.sent + len(sess)
+
+
+# -- degraded-mode control ---------------------------------------------------
+
+def test_degraded_floor_ramps_monotone_and_snaps_back_to_zero():
+    """Unit-drive the degraded controller: while the breaker is open
+    the floor ramps monotonically toward max_drop; once healthy it
+    decays smoothly (no oscillation) and snaps to exactly 0.0."""
+    sess = _session(C=1)
+    cfg = DegradedConfig(max_drop=0.9, ramp_up=0.5, ramp_down=0.3,
+                         on_latency=False)
+    svc = _service(sess, MockBackend(jitter=0.0),
+                   resilience=ResilienceConfig(degraded=cfg))
+    br = svc.sender.breaker
+    for _ in range(4):                     # trip the breaker
+        br.on_failure(0.0)
+    assert br.state == OPEN
+    up = []
+    for k in range(8):
+        svc._update_degraded(0.5 * k)
+        up.append(svc._rate_floor)
+    assert all(b > a for a, b in zip(up, up[1:]))        # monotone up
+    assert up[-1] == pytest.approx(0.9, abs=1e-2)        # -> max_drop
+    assert sess.rate_floor == up[-1]       # the session saw the floor
+    br.can_send(10.0)                      # lapse to HALF_OPEN
+    br.on_send(10.0)
+    br.on_success(10.0)                    # probe succeeds -> CLOSED
+    down = []
+    for k in range(40):
+        svc._update_degraded(10.0 + 0.5 * k)
+        down.append(svc._rate_floor)
+    assert all(b < a or b == 0.0 for a, b in zip(down, down[1:]))
+    assert down[-1] == 0.0                 # snapped, not asymptotic
+    assert sess.rate_floor == 0.0
+
+
+def test_degraded_mode_engages_on_latency_blowout():
+    """End-to-end: a backend whose measured latency blows the E2E
+    budget drives the service into the degraded regime even though no
+    send ever fails; a fast backend never engages it."""
+    sess = _session(C=1)
+    svc = _service(sess, MockBackend(filter_latency=3.0, dnn_latency=3.0,
+                                     jitter=0.0),
+                   resilience=ResilienceConfig(
+                       degraded=DegradedConfig(max_drop=0.9, ramp_up=0.5)))
+    res = svc.run(_arrivals(C=1, n=40))
+    assert res.metrics["derived"]["degraded_time_fraction"] > 0.0
+    assert res.metrics["gauges"]["control.rate_floor"]["max"] > 0.4
+    assert sess.rate_floor > 0.0           # still unhealthy at the end
+
+    sess2 = _session(C=1)
+    svc2 = _service(sess2, MockBackend(filter_latency=0.01,
+                                       dnn_latency=0.01, jitter=0.0),
+                    resilience=ResilienceConfig())
+    res2 = svc2.run(_arrivals(C=1, n=40))
+    assert res2.metrics["derived"]["degraded_time_fraction"] == 0.0
+    assert sess2.rate_floor == 0.0
+
+
+def test_rate_floor_sheds_harder_on_session():
+    """The floor feeds Eq. 19 directly: rates are clamped up and the
+    thresholds rise to the matching CDF quantile."""
+    sess = _session(C=2)
+    snap0 = sess.tick()
+    assert snap0["target_drop_rate"] == 0.0
+    sess.set_rate_floor(0.8)
+    snap = sess.tick()
+    assert snap["target_drop_rate"] == pytest.approx(0.8, abs=1e-6)
+    assert np.isfinite(snap["threshold"]) and snap["threshold"] > 0.5
+    sess.set_rate_floor(0.0)
+    snap2 = sess.tick()
+    assert snap2["target_drop_rate"] == 0.0
+    assert snap2["threshold"] == snap0["threshold"]   # exact recovery

@@ -326,3 +326,52 @@ def test_empty_run():
     svc = _service(_session(C=1))
     res = svc.run([])
     assert res.offered == [] and res.processed == [] and res.violations == 0
+
+
+# -- live push API -----------------------------------------------------------
+
+def test_submit_drain_finalize_matches_run():
+    """``run`` is a thin wrapper: pushing the same arrivals through
+    ``submit``/``drain``/``finalize`` yields the identical result."""
+    arrivals = _arrivals(C=2, n=60)
+    res_run = _service(_session(C=2)).run(arrivals)
+
+    svc = _service(_session(C=2))
+    svc.reset()
+    for a in arrivals:
+        svc.submit(a)
+    svc.drain()
+    res_push = svc.finalize()
+
+    assert res_run.kept_mask == res_push.kept_mask
+    assert [(p.record.cam_id, p.record.frame_idx, p.t_sent, p.t_done)
+            for p in res_run.processed] == \
+        [(p.record.cam_id, p.record.frame_idx, p.t_sent, p.t_done)
+         for p in res_push.processed]
+    assert json.dumps(res_run.metrics, sort_keys=True) == \
+        json.dumps(res_push.metrics, sort_keys=True)
+    assert json.dumps(res_run.trace, sort_keys=True) == \
+        json.dumps(res_push.trace, sort_keys=True)
+
+
+def test_drain_wait_blocks_until_stop():
+    """wait=True keeps the loop alive for live submitters until
+    ``stop()``; submissions from another thread are served."""
+    import threading
+
+    svc = _service(_session(C=1))
+    svc.reset()
+    arrivals = _arrivals(C=1, n=12)
+
+    def feeder():
+        for a in arrivals:
+            svc.submit(a)
+        svc.stop()
+
+    t = threading.Thread(target=feeder)
+    t.start()
+    svc.drain(wait=True, poll=0.01)
+    t.join()
+    res = svc.finalize()
+    assert len(res.offered) == 12
+    assert len(res.processed) > 0
