@@ -67,6 +67,9 @@ def _setup(quick: bool) -> dict:
         "query": Query.single(RED, latency_bound=BOUND, fps=FPS),
         "model": model,
         "train_us": train_us,
+        # raw RGB per camera lane, for scenarios that perturb pixels
+        # and rescore through the fused frame path (drift)
+        "cam_rgb": [sc.frames_rgb().astype(np.float32) for sc in scs[3:]],
     }
 
 
@@ -115,15 +118,22 @@ def _baseline(su: dict) -> dict:
 
 
 def _drift(su: dict) -> dict:
-    """Diurnal illumination drift: a slow sinusoid scales the utility
-    scores (bright noon -> dim dusk), so the admission threshold must
-    track a moving CDF instead of a stationary one."""
+    """Diurnal illumination drift: a slow sinusoid scales the PIXELS
+    (bright noon -> dim dusk) and every frame is rescored through the
+    fused in-dispatch path — RGB->HSV, background subtraction, PF
+    features, utility and admission in one device program per window —
+    so the admission threshold must track the moving distribution the
+    real optics would produce, not a post-hoc scaling of cached
+    scores."""
     period = su["duration"]
-    recs = [replace(r, utility=float(np.clip(
-        r.utility * (0.75 + 0.35 * np.sin(2 * np.pi * r.t_gen / period)),
-        0.0, 1.0))) for r in su["recs"]]
+    arrs = []
+    for r in su["recs"]:
+        g = 0.75 + 0.35 * np.sin(2 * np.pi * r.t_gen / period)
+        frame = np.clip(su["cam_rgb"][r.cam_id][r.frame_idx] * g,
+                        0.0, 255.0).astype(np.float32)
+        arrs.append(Arrival(t=r.t_gen, cam=r.cam_id, record=r, frame=frame))
     svc = _service(_session(su), MockBackend(seed=BENCH_SEED))
-    res = svc.run(_arrivals(recs))
+    res = svc.run(arrs)
     out = _report(res)
     ths = [s["threshold"] for s in res.trace if np.isfinite(s["threshold"])]
     out["threshold_span"] = (round(max(ths) - min(ths), 4) if ths else 0.0)

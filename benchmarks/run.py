@@ -27,6 +27,7 @@ BENCHES = [
     ("fleet_sharded", "benchmarks.bench_fleet"),
     ("service_streaming", "benchmarks.bench_service"),
     ("scenarios_resilience", "benchmarks.bench_scenarios"),
+    ("cascade_qor", "benchmarks.bench_cascade"),
     ("roofline_summary", "benchmarks.roofline"),
 ]
 
@@ -38,6 +39,9 @@ CONSOLIDATED = Path("BENCH_serve.json")
 # robustness scenarios land in their own consolidated file — they are
 # pass/fail acceptance facts + QoR-under-stress, not perf trajectory
 SCENARIO_FILE = Path("BENCH_scenarios.json")
+# two-stage cascade QoR comparison: acceptance facts (cascade >= color
+# at equal shed rate) in their own file, same reasoning
+CASCADE_FILE = Path("BENCH_cascade.json")
 
 
 def _write_consolidated(results: dict, path: Path = CONSOLIDATED) -> None:
@@ -86,6 +90,10 @@ def main() -> None:
                 _write_consolidated(
                     {name: {**entry, "scenarios": res["scenarios"]}},
                     SCENARIO_FILE)
+            elif "cascade" in res:
+                _write_consolidated(
+                    {name: {**entry, "cascade": res["cascade"]}},
+                    CASCADE_FILE)
             else:
                 consolidated[name] = entry
             derived = json.dumps(res["derived"], sort_keys=True)
@@ -95,6 +103,8 @@ def main() -> None:
             err = {"error": f"{type(e).__name__}: {e}"}
             if name.startswith("scenarios"):
                 _write_consolidated({name: err}, SCENARIO_FILE)
+            elif name.startswith("cascade"):
+                _write_consolidated({name: err}, CASCADE_FILE)
             else:
                 consolidated[name] = err
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -1,0 +1,146 @@
+"""Distillation training for the stage-2 semantic scorer.
+
+The scorer never sees hand labels: it is fit on synthetic scenarios
+(``repro.data.synthetic``) whose per-frame ground truth — "a target-
+color *vehicle* is present", not merely "target-color pixels are
+present" — is exactly the semantic distinction stage 1 cannot make.
+Each training example is the frame's foreground-bbox crop (the same
+free ROI the serving path gets from the ingest kernel) plus that
+ground-truth bit, so train and serve see identical inputs.
+
+Optimization reuses the training stack wholesale: AdamW +
+``make_scorer_train_step`` from ``repro.train``, checkpoints via
+``repro.train.checkpoint``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cascade.scorer import (
+    MLPScorer,
+    extract_rois,
+    roi_geometry,
+    scorer_logits,
+)
+from repro.data.synthetic import combined_label
+from repro.kernels.hsv_features.ops import ingest_pipeline
+from repro.train.optimizer import AdamW, constant_lr
+from repro.train.step import make_scorer_train_step
+
+
+def collect_examples(scenarios, colors, *, op: str = "or",
+                     alpha: float = 0.05, threshold: float = 18.0,
+                     use_foreground: bool = True,
+                     impl: Optional[str] = None,
+                     interpret: Optional[bool] = None):
+    """Scenarios -> (frames (M, H, W, 3) f32, bboxes (M, 4) i32,
+    labels (M,) f32). Bboxes come from the real ingest path
+    (``ingest_pipeline(with_bbox=True)``) so training crops match what
+    the cascade sees at serve time.
+    """
+    names = [c.name for c in colors]
+    frames_all, bbox_all, labels_all = [], [], []
+    for sc in scenarios:
+        rgb = jnp.asarray(sc.frames_rgb(), jnp.float32)
+        _, _, _, _, bbox = ingest_pipeline(
+            rgb, colors, None, with_bbox=True, alpha=alpha,
+            threshold=threshold, use_foreground=use_foreground,
+            impl=impl, interpret=interpret)
+        frames_all.append(np.asarray(rgb, np.float32))
+        bbox_all.append(np.asarray(bbox, np.int32))
+        labels_all.append(
+            np.asarray(combined_label(sc, names, op), np.float32))
+    return (np.concatenate(frames_all), np.concatenate(bbox_all),
+            np.concatenate(labels_all))
+
+
+def _bce_loss(params, batch):
+    x, geo, y, w = batch
+    logits = scorer_logits(params, x, geo)
+    ce = (jnp.maximum(logits, 0.0) - logits * y
+          + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    loss = jnp.sum(w * ce) / jnp.maximum(jnp.sum(w), 1e-9)
+    acc = jnp.mean(((logits > 0) == (y > 0.5)).astype(jnp.float32))
+    return loss, {"accuracy": acc}
+
+
+def fit_scorer(scenarios, colors, *, op: str = "or", roi_size: int = 16,
+               hidden: int = 32, steps: int = 200, batch_size: int = 256,
+               lr: float = 3e-3, seed: int = 0, augment: bool = True,
+               checkpoint_dir=None, alpha: float = 0.05,
+               threshold: float = 18.0, use_foreground: bool = True,
+               impl: Optional[str] = None,
+               interpret: Optional[bool] = None):
+    """Fit an ``MLPScorer`` on synthetic-scenario ground truth.
+
+    Returns ``(scorer, metrics)``; ``metrics`` reports the class
+    balance, final training accuracy over all examples, and the mean
+    score separation between positive and negative frames. With
+    ``checkpoint_dir`` the fitted parameters are saved via
+    ``repro.train.checkpoint`` (restore with
+    ``MLPScorer.from_checkpoint``).
+    """
+    frames, bboxes, labels = collect_examples(
+        scenarios, colors, op=op, alpha=alpha, threshold=threshold,
+        use_foreground=use_foreground, impl=impl, interpret=interpret)
+    crops = np.asarray(extract_rois(jnp.asarray(frames),
+                                    jnp.asarray(bboxes), roi_size))
+    geo = np.asarray(roi_geometry(jnp.asarray(bboxes),
+                                  frames.shape[1], frames.shape[2]))
+
+    pos = float(labels.sum())
+    neg = float(len(labels) - pos)
+    # class-balance the BCE: scenarios are mostly-idle by construction
+    w_pos = neg / max(pos, 1.0)
+    weights = np.where(labels > 0.5, w_pos, 1.0).astype(np.float32)
+
+    scorer = MLPScorer.init(seed, roi_size=roi_size, hidden=hidden)
+    opt = AdamW(lr=constant_lr(lr), weight_decay=0.0)
+    step_fn = make_scorer_train_step(_bce_loss, opt)
+    params, opt_state = scorer.params, opt.init(scorer.params)
+
+    rng = np.random.default_rng(seed)
+    bs = min(batch_size, len(labels))
+    losses = []
+    for _ in range(steps):
+        idx = rng.integers(0, len(labels), size=bs)
+        x = crops[idx]
+        if augment:
+            # brightness gain (the scenarios carry illumination drift),
+            # horizontal flip (traffic runs both ways) and pixel noise:
+            # without these the head memorizes exact pixel values of
+            # the training span and collapses on the serving span
+            x = x * rng.uniform(0.75, 1.25, (bs, 1, 1, 1))
+            flip = rng.random(bs) < 0.5
+            x[flip] = x[flip, :, ::-1]
+            x = np.clip(x + rng.normal(0.0, 4.0, x.shape), 0.0, 255.0)
+            x = x.astype(np.float32)
+        batch = (jnp.asarray(x), jnp.asarray(geo[idx]),
+                 jnp.asarray(labels[idx]), jnp.asarray(weights[idx]))
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+
+    fitted = MLPScorer(params=params, roi_size=roi_size)
+    scores = np.asarray(
+        jax.nn.sigmoid(scorer_logits(params, jnp.asarray(crops),
+                                     jnp.asarray(geo))),
+        np.float32)
+    acc = float(np.mean((scores > 0.5) == (labels > 0.5)))
+    sep = float((scores[labels > 0.5].mean() if pos else 0.0)
+                - (scores[labels <= 0.5].mean() if neg else 0.0))
+    metrics = {
+        "examples": int(len(labels)), "positives": int(pos),
+        "loss_first": losses[0] if losses else float("nan"),
+        "loss_final": losses[-1] if losses else float("nan"),
+        "accuracy": acc, "separation": sep,
+    }
+    if checkpoint_dir is not None:
+        fitted.save(checkpoint_dir, step=steps)
+    return fitted, metrics
+
+
+__all__ = ["collect_examples", "fit_scorer"]

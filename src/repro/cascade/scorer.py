@@ -1,0 +1,229 @@
+"""Second-stage semantic scorers for the shedding cascade.
+
+The color-utility shedder (stage 1) is size/shape-blind by
+construction: PF matrices are *normalized* distributions over the
+(sat, val) bins of the foreground pixels, so a 10-pixel red blob and a
+300-pixel red vehicle score identically. Stage 2 re-scores the frames
+that pass the color threshold with a tiny learned head over a
+downsampled crop of the ingest kernel's foreground bounding box (the
+ROI is a free by-product of background subtraction — see
+``kernels.hsv_features.ref.foreground_bbox``), which *can* express
+size, aspect and layout — the queries the 64-bin histogram cannot.
+
+``SemanticScorer``
+    The protocol: ``score(frames, bboxes) -> (B,) float32`` in [0, 1].
+
+``MLPScorer``
+    The deployable implementation: fixed-grid ROI resample -> flatten
+    -> 2-layer MLP -> sigmoid, one jitted dispatch per batch (batch
+    padded to the next power of two so retraces are O(log B) total).
+    Parameters checkpoint via ``repro.train.checkpoint``.
+
+``CallableScorer``
+    Wraps any host callable — mocks, tests, or an external model.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.colors import rgb_to_hsv_jnp
+
+
+@runtime_checkable
+class SemanticScorer(Protocol):
+    """Stage-2 scorer contract: batched frames + foreground bboxes ->
+    per-frame semantic utilities in [0, 1]."""
+
+    def score(self, frames: np.ndarray, bboxes: np.ndarray) -> np.ndarray:
+        """frames: (B, H, W, 3) float32 RGB in [0, 255]; bboxes: (B, 4)
+        int32 (row_min, row_max, col_min, col_max), all -1 = empty.
+        Returns (B,) float32 scores."""
+        ...
+
+
+def extract_rois(frames, bboxes, size: int):
+    """Crop each frame to its foreground bbox and resample to a fixed
+    ``(size, size)`` grid (nearest neighbor — jittable, no dynamic
+    shapes). Empty bboxes (all -1) fall back to the full frame, so a
+    frame with no foreground still produces a well-defined crop.
+
+    frames: (B, H, W, 3); bboxes: (B, 4) int32 inclusive bounds.
+    Returns (B, size, size, 3) float32.
+    """
+    frames = jnp.asarray(frames, jnp.float32)
+    B, H, W = frames.shape[0], frames.shape[1], frames.shape[2]
+    bb = jnp.asarray(bboxes, jnp.int32)
+    empty = bb[:, 1] < 0
+    r0 = jnp.where(empty, 0, bb[:, 0])
+    r1 = jnp.where(empty, H - 1, bb[:, 1])
+    c0 = jnp.where(empty, 0, bb[:, 2])
+    c1 = jnp.where(empty, W - 1, bb[:, 3])
+    t = (jnp.arange(size, dtype=jnp.float32) + 0.5) / size
+    ys = r0[:, None] + jnp.floor(
+        t[None, :] * (r1 - r0 + 1)[:, None]).astype(jnp.int32)
+    xs = c0[:, None] + jnp.floor(
+        t[None, :] * (c1 - c0 + 1)[:, None]).astype(jnp.int32)
+    ys = jnp.clip(ys, 0, H - 1)
+    xs = jnp.clip(xs, 0, W - 1)
+    rows = jnp.arange(B)[:, None, None]
+    return frames[rows, ys[:, :, None], xs[:, None, :]]
+
+
+# geometry rider appended to the flattened crop: the fixed-grid
+# resample normalizes away absolute scale (a tight bbox around a
+# 6-pixel blob fills the ROI exactly like a vehicle does), so the bbox
+# extent itself must reach the head as a feature
+N_GEO = 4
+
+
+def roi_geometry(bboxes, height: int, width: int):
+    """(B, 4) float32 bbox geometry in [0, 1]: height fraction, width
+    fraction, area fraction, and a foreground-present flag. Empty
+    bboxes (all -1) are all-zero."""
+    bb = jnp.asarray(bboxes, jnp.int32)
+    empty = bb[:, 1] < 0
+    hf = (bb[:, 1] - bb[:, 0] + 1).astype(jnp.float32) / float(height)
+    wf = (bb[:, 3] - bb[:, 2] + 1).astype(jnp.float32) / float(width)
+    geo = jnp.stack([hf, wf, hf * wf, jnp.ones_like(hf)], axis=-1)
+    return jnp.where(empty[:, None], 0.0, geo)
+
+
+def _crop_features(crops):
+    """RGB crops -> chroma-weighted hue vector + value, all in [-1, 1].
+
+    Hue is an angle (target reds straddle the 0/180 wrap), so it enters
+    as a (cos, sin) unit vector scaled by saturation — hue is noise at
+    low chroma, and S and H are invariant to the illumination drift the
+    scenarios carry, which raw RGB is not."""
+    hsv = rgb_to_hsv_jnp(jnp.asarray(crops, jnp.float32))
+    ang = hsv[..., 0] * (2.0 * jnp.pi / 180.0)
+    sat = hsv[..., 1:2] / 255.0
+    return jnp.concatenate([jnp.cos(ang)[..., None] * sat,
+                            jnp.sin(ang)[..., None] * sat,
+                            hsv[..., 2:3] / 255.0], axis=-1)
+
+
+def scorer_logits(params: Dict[str, Any], crops, geo):
+    """The MLP head: (B, size, size, 3) RGB crops + (B, N_GEO) bbox
+    geometry -> (B,) logits."""
+    f = _crop_features(crops)
+    x = f.reshape(f.shape[0], -1)
+    x = jnp.concatenate([x, jnp.asarray(geo, jnp.float32)], axis=-1)
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _score_batch(params, frames, bboxes, *, size):
+    crops = extract_rois(frames, bboxes, size)
+    geo = roi_geometry(bboxes, frames.shape[1], frames.shape[2])
+    # softsign, not sigmoid: a well-trained head drives float32 sigmoid
+    # to exactly 0.0/1.0, and a point mass at the extremes is invisible
+    # to the stage-2 quantile threshold (ties at the threshold are
+    # kept, so control undersheds and the overflow floods the queue).
+    # x/(8+|x|) is strictly monotone with no float32 saturation at
+    # realistic logit magnitudes — same ranking, quantile-splittable.
+    x = scorer_logits(params, crops, geo)
+    return 0.5 * (1.0 + x / (8.0 + jnp.abs(x)))
+
+
+@dataclass
+class MLPScorer:
+    """Tiny jitted MLP over the downsampled foreground ROI."""
+    params: Dict[str, Any]
+    roi_size: int = 16
+
+    @classmethod
+    def init(cls, seed: int = 0, *, roi_size: int = 16,
+             hidden: int = 32) -> "MLPScorer":
+        d = roi_size * roi_size * 3 + N_GEO
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        params = {
+            "w1": (jax.random.normal(k1, (d, hidden), jnp.float32)
+                   / np.sqrt(d)),
+            "b1": jnp.zeros((hidden,), jnp.float32),
+            "w2": (jax.random.normal(k2, (hidden, 1), jnp.float32)
+                   / np.sqrt(hidden)),
+            "b2": jnp.zeros((1,), jnp.float32),
+        }
+        return cls(params=params, roi_size=roi_size)
+
+    def score(self, frames, bboxes) -> np.ndarray:
+        frames = np.asarray(frames, np.float32)
+        bboxes = np.asarray(bboxes, np.int32)
+        b = frames.shape[0]
+        if b == 0:
+            return np.zeros((0,), np.float32)
+        # pad the batch to the next power of two: O(log B) distinct
+        # shapes ever reach the jitted scorer, bounding retraces
+        bp = 1 << (b - 1).bit_length()
+        if bp != b:
+            frames = np.concatenate(
+                [frames, np.zeros((bp - b, *frames.shape[1:]), np.float32)])
+            bboxes = np.concatenate(
+                [bboxes, np.full((bp - b, 4), -1, np.int32)])
+        out = _score_batch(self.params, frames, bboxes, size=self.roi_size)
+        return np.asarray(out[:b], np.float32)
+
+    # -- persistence (repro.train.checkpoint format) -------------------------
+
+    def save(self, path, step: int = 0, *, async_: bool = False):
+        from repro.train import checkpoint as ckpt
+        meta = {"kind": "cascade_scorer", "roi_size": int(self.roi_size),
+                "hidden": int(self.params["b1"].shape[0])}
+        return ckpt.save(path, step, dict(self.params), metadata=meta,
+                         async_=async_)
+
+    @classmethod
+    def from_checkpoint(cls, path, *, roi_size: int = 16, hidden: int = 32,
+                        step: Optional[int] = None) -> "MLPScorer":
+        from repro.train import checkpoint as ckpt
+        template = cls.init(0, roi_size=roi_size, hidden=hidden).params
+        out, _, meta = ckpt.restore(path, template, step=step)
+        return cls(params={k: jnp.asarray(v) for k, v in out.items()},
+                   roi_size=int(meta.get("roi_size", roi_size)))
+
+
+@dataclass
+class CallableScorer:
+    """Adapter: any host callable as a SemanticScorer (mocks/tests)."""
+    fn: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    roi_size: int = 16
+
+    def score(self, frames, bboxes) -> np.ndarray:
+        return np.asarray(self.fn(frames, bboxes), np.float32).reshape(-1)
+
+
+@dataclass
+class Cascade:
+    """Cascade spec handed to ``ShedSession(cascade=...)``.
+
+    ``gate_fraction`` splits the Eq. 19 combined target drop rate r:
+    stage 1 (color) sheds ``r1 = gate_fraction * r`` of all arrivals at
+    its CDF quantile, stage 2 sheds the conditional remainder
+    ``r2 = (r - r1) / (1 - r1)`` of the survivors at the stage-2 score
+    quantile — so the combined realized rate tracks r exactly and the
+    degraded-mode floor (applied to r before the split) bounds the
+    *combined* rate. ``window`` sizes the per-camera stage-2 score ring
+    (``SessionState.s2_buf``).
+    """
+    scorer: Any
+    gate_fraction: float = 0.5
+    window: int = 1024
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= float(self.gate_fraction) <= 1.0:
+            raise ValueError(
+                f"gate_fraction {self.gate_fraction} outside [0, 1]")
+        if int(self.window) < 1:
+            raise ValueError("cascade window must be >= 1")
+
+
+__all__ = ["SemanticScorer", "MLPScorer", "CallableScorer", "Cascade",
+           "extract_rois", "roi_geometry", "scorer_logits"]

@@ -95,9 +95,10 @@ from repro.kernels.hsv_features.ops import (
 ADMIT = 0
 SHED_ADMISSION = 1
 SHED_QUEUE = 2
+SHED_CASCADE = 3     # passed the color gate, shed by the stage-2 scorer
 
 _DECISION_NAMES = {ADMIT: "queued", SHED_ADMISSION: "shed_admission",
-                   SHED_QUEUE: "shed_queue"}
+                   SHED_QUEUE: "shed_queue", SHED_CASCADE: "shed_cascade"}
 
 
 def _as_color(c: Union[str, Color]) -> Color:
@@ -203,6 +204,14 @@ class SessionState:
     #                  nothing); all-True is bit-identical to pre-churn
     rate_floor: Any  # (C,) float32 — degraded-mode floor under the
     #                  Eq. 19 target drop rates; 0 = normal regime
+    # stage-2 (semantic cascade) lanes — inert unless the session was
+    # opened with cascade=; same ring/threshold machinery as the
+    # stage-1 CDF, but over the scorer outputs of frames that PASSED
+    # the color gate
+    s2_buf: Any        # (C, W2) float32 stage-2 score ring
+    s2_len: Any        # (C,) int32
+    s2_pos: Any        # (C,) int32
+    s2_threshold: Any  # (C,) float32 stage-2 shed thresholds
 
     @property
     def num_cameras(self) -> int:
@@ -216,7 +225,7 @@ class SessionState:
     def fresh(cls, num_cameras: int, npix: int = 0, *,
               cdf_window: int = 4096, fps: float = 10.0,
               queue_size: int = 8, queue_capacity: int = 64,
-              xp=np) -> "SessionState":
+              s2_window: int = 64, xp=np) -> "SessionState":
         C = int(num_cameras)
         K = max(int(queue_capacity), int(queue_size), 1)
         q_util, q_seq, q_next = sq.make_lanes(C, K, xp=xp)
@@ -236,6 +245,10 @@ class SessionState:
             q_util=q_util, q_seq=q_seq, q_next_seq=q_next,
             active=xp.ones((C,), bool),
             rate_floor=xp.zeros((C,), xp.float32),
+            s2_buf=xp.zeros((C, int(s2_window)), xp.float32),
+            s2_len=xp.zeros((C,), xp.int32),
+            s2_pos=xp.zeros((C,), xp.int32),
+            s2_threshold=xp.full((C,), -xp.inf, xp.float32),
         )
 
 
@@ -264,6 +277,9 @@ class StepResult:
     pushed_seq: np.ndarray
     evicted: List[np.ndarray]
     target_drop_rate: Optional[np.ndarray] = None
+    # (C, T) stage-2 scores when the step ran the semantic cascade
+    # (0 for frames the color gate shed before the scorer saw them)
+    s2_scores: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +465,207 @@ def _control_core_host(state: SessionState, util, present, *,
     return state, out
 
 
+# ---------------------------------------------------------------------------
+# Semantic-cascade cores. Same twin discipline as the single-stage
+# control cores, but split around the host scorer call: phase A (stage-1
+# CDF push + color gate) -> scorer on the survivors -> phase B (stage-2
+# ring push + gate + queue insertion + optional cascade tick). The
+# single-stage cores above are untouched, so cascade-off sessions stay
+# bit-identical to the pre-cascade pipeline.
+# ---------------------------------------------------------------------------
+
+def _cascade_rates(rates, gate_fraction, xp):
+    """Split the Eq. 19 combined target drop rate r into the stage-1
+    share r1 = g*r and the stage-2 CONDITIONAL share r2 = (r-r1)/(1-r1)
+    (of the survivors), so r1 + (1-r1)*r2 == r exactly — the combined
+    realized rate tracks r and the degraded floor (already folded into
+    ``rates``) bounds the combined rate."""
+    r1 = (rates * xp.float32(gate_fraction)).astype(xp.float32)
+    r2 = ((rates - r1)
+          / xp.maximum(1.0 - r1, xp.float32(1e-9))).astype(xp.float32)
+    return r1, r2
+
+
+def _cascade_tick_core_dev(state: SessionState, min_proc: float,
+                           budget: float, gate_fraction: float,
+                           num_total: Optional[int] = None):
+    """Two-threshold tick: the combined Eq. 18-20 rate (floor + churn
+    mask applied first, as in ``_tick_core_dev``) is split across the
+    stages; each stage's threshold comes from ITS ring at ITS share."""
+    C = num_total if num_total is not None else state.threshold.shape[0]
+    p = jnp.maximum(state.proc_q, min_proc)
+    rates = jnp.clip(
+        1.0 - 1.0 / (p * C * jnp.maximum(state.fps_obs, 1e-9)),
+        0.0, 1.0).astype(jnp.float32)
+    rates = jnp.maximum(rates, state.rate_floor).astype(jnp.float32)
+    rates = jnp.where(state.active, rates, jnp.float32(0.0))
+    r1, r2 = _cascade_rates(rates, gate_fraction, jnp)
+    threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len, r1)
+    threshold = jnp.where(state.active, threshold, jnp.float32(jnp.inf))
+    s2_threshold = thresholds_from_lanes_dev(state.s2_buf, state.s2_len, r2)
+    s2_threshold = jnp.where(state.active, s2_threshold,
+                             jnp.float32(jnp.inf))
+    cap = jnp.maximum((budget / p + 1e-9).astype(jnp.int32) - 1, 1)
+    q_util, q_seq, resize_ev = sq.resize_dev(state.q_util, state.q_seq, cap)
+    state = dataclasses.replace(
+        state, threshold=threshold, s2_threshold=s2_threshold,
+        queue_cap=cap.astype(jnp.int32), q_util=q_util, q_seq=q_seq)
+    return state, rates, resize_ev
+
+
+def _cascade_tick_core_host(state: SessionState, min_proc: float,
+                            budget: float, gate_fraction: float,
+                            num_total: Optional[int] = None):
+    """NumPy twin of :func:`_cascade_tick_core_dev` (in-place)."""
+    C = num_total if num_total is not None else state.threshold.shape[0]
+    p = np.maximum(state.proc_q, min_proc)
+    rates = np.clip(
+        1.0 - np.float32(1.0) / (p * C * np.maximum(state.fps_obs, 1e-9)),
+        0.0, 1.0).astype(np.float32)
+    rates = np.maximum(rates, state.rate_floor).astype(np.float32)
+    rates = np.where(state.active, rates, np.float32(0.0))
+    r1, r2 = _cascade_rates(rates, gate_fraction, np)
+    threshold = thresholds_from_lanes_host(state.cdf_buf, state.cdf_len, r1)
+    state.threshold = np.where(state.active, threshold,
+                               np.float32(np.inf)).astype(np.float32)
+    s2_th = thresholds_from_lanes_host(state.s2_buf, state.s2_len, r2)
+    state.s2_threshold = np.where(state.active, s2_th,
+                                  np.float32(np.inf)).astype(np.float32)
+    cap = np.maximum((budget / p + 1e-9).astype(np.int32) - 1, 1)
+    state.queue_cap = cap.astype(np.int32)
+    resize_ev = sq.resize_host(state.q_util, state.q_seq, cap)
+    return rates, resize_ev
+
+
+@functools.partial(jax.jit, static_argnames=("update_cdf",),
+                   donate_argnames=("state",))
+def _cascade_admit_dev(state, util, present, *, update_cdf):
+    """Cascade phase A on device: stage-1 CDF push + color gate.
+    Returns (state', pass1 (C, T) bool — the frames the scorer sees)."""
+    util = util.astype(jnp.float32)
+    cdf_buf, cdf_pos, cdf_len = state.cdf_buf, state.cdf_pos, state.cdf_len
+    if update_cdf:
+        cdf_buf, cdf_pos, cdf_len = _ring_push_dev(
+            cdf_buf, cdf_pos, cdf_len, util, present)
+    pass1 = present & ~(util < state.threshold[:, None])
+    state = dataclasses.replace(state, cdf_buf=cdf_buf, cdf_pos=cdf_pos,
+                                cdf_len=cdf_len)
+    return state, pass1
+
+
+def _cascade_admit_host(state, util, present, *, update_cdf):
+    """NumPy twin of :func:`_cascade_admit_dev` (in-place)."""
+    util = np.asarray(util, np.float32)
+    if update_cdf:
+        state.cdf_pos, state.cdf_len = _ring_push_host(
+            state.cdf_buf, state.cdf_pos, state.cdf_len, util, present)
+    return present & ~(util < state.threshold[:, None])
+
+
+def _cascade_finish_core_dev(state: SessionState, s2, present, pass1, *,
+                             do_tick: bool, min_proc: float, budget: float,
+                             gate_fraction: float,
+                             num_total: Optional[int] = None):
+    """Cascade phase B on device: stage-2 ring push (survivors only) ->
+    stage-2 gate -> queue insertion keyed by the SEMANTIC score ->
+    (optional) two-threshold tick."""
+    s2 = s2.astype(jnp.float32)
+    C, T = s2.shape
+    rows = jnp.arange(C)[:, None]
+    s2_buf, s2_pos, s2_len = _ring_push_dev(
+        state.s2_buf, state.s2_pos, state.s2_len, s2, pass1)
+    shed2 = pass1 & (s2 < state.s2_threshold[:, None])
+    admit = pass1 & ~shed2
+    decisions = jnp.where(
+        admit, ADMIT,
+        jnp.where(pass1, SHED_CASCADE, SHED_ADMISSION)).astype(jnp.int8)
+    decisions = jnp.where(present, decisions, jnp.int8(-1))
+    q_util, q_seq, q_next, pushed_seq, ev_s, ev_b = sq.push_batch_dev(
+        state.q_util, state.q_seq, state.q_next_seq, s2, admit,
+        state.queue_cap)
+    # retro SHED_QUEUE flips: evicted slots were ADMIT (0) and every
+    # code is <= 3, so a scatter-max with -1 dummies is exact
+    flip = ev_b >= 0
+    decisions = decisions.at[rows, jnp.where(flip, ev_b, 0)].max(
+        jnp.where(flip, jnp.int8(SHED_QUEUE), jnp.int8(-1)))
+    state = dataclasses.replace(
+        state, s2_buf=s2_buf, s2_pos=s2_pos, s2_len=s2_len,
+        q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
+    out = {
+        "decisions": decisions,
+        "pushed_seq": pushed_seq,
+        "evicted_resident": jnp.where((ev_b < 0) & (ev_s >= 0), ev_s, -1),
+        "push_evictions": (ev_s >= 0).sum(axis=-1).astype(jnp.int32),
+        "rates": jnp.zeros((C,), jnp.float32),
+        "resize_evicted": jnp.full_like(state.q_seq, -1),
+    }
+    if do_tick:
+        state, rates, resize_ev = _cascade_tick_core_dev(
+            state, min_proc, budget, gate_fraction, num_total)
+        out["rates"] = rates
+        out["resize_evicted"] = resize_ev
+    return state, out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("do_tick", "min_proc", "budget", "gate_fraction",
+                     "num_total"),
+    donate_argnames=("state",))
+def _cascade_finish_dev(state, s2, present, pass1, *, do_tick, min_proc,
+                        budget, gate_fraction, num_total=None):
+    return _cascade_finish_core_dev(
+        state, s2, present, pass1, do_tick=do_tick, min_proc=min_proc,
+        budget=budget, gate_fraction=gate_fraction, num_total=num_total)
+
+
+def _cascade_finish_core_host(state: SessionState, s2, present, pass1, *,
+                              do_tick: bool, min_proc: float, budget: float,
+                              gate_fraction: float,
+                              num_total: Optional[int] = None):
+    """NumPy twin of :func:`_cascade_finish_core_dev` (in-place)."""
+    s2 = np.asarray(s2, np.float32)
+    C, T = s2.shape
+    state.s2_pos, state.s2_len = _ring_push_host(
+        state.s2_buf, state.s2_pos, state.s2_len, s2, pass1)
+    shed2 = pass1 & (s2 < state.s2_threshold[:, None])
+    admit = pass1 & ~shed2
+    decisions = np.where(
+        admit, ADMIT,
+        np.where(pass1, SHED_CASCADE, SHED_ADMISSION)).astype(np.int8)
+    decisions = np.where(present, decisions, np.int8(-1))
+    q_next, pushed_seq, ev_s, ev_b = sq.push_batch_host(
+        state.q_util, state.q_seq, state.q_next_seq, s2, admit,
+        state.queue_cap)
+    state.q_next_seq = q_next
+    r, i = np.nonzero(ev_b >= 0)
+    decisions[r, ev_b[r, i]] = SHED_QUEUE
+    out = {
+        "decisions": decisions,
+        "pushed_seq": pushed_seq,
+        "evicted_resident": np.where((ev_b < 0) & (ev_s >= 0), ev_s, -1),
+        "push_evictions": (ev_s >= 0).sum(axis=-1).astype(np.int32),
+        "rates": np.zeros((C,), np.float32),
+        "resize_evicted": np.full_like(state.q_seq, -1),
+    }
+    if do_tick:
+        rates, resize_ev = _cascade_tick_core_host(
+            state, min_proc, budget, gate_fraction, num_total)
+        out["rates"] = rates
+        out["resize_evicted"] = resize_ev
+    return state, out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("min_proc", "budget", "gate_fraction", "num_total"),
+    donate_argnames=("state",))
+def _cascade_tick_dev(state, *, min_proc, budget, gate_fraction,
+                      num_total=None):
+    return _cascade_tick_core_dev(state, min_proc, budget, gate_fraction,
+                                  num_total)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("update_cdf", "do_tick", "min_proc", "budget",
@@ -571,12 +788,26 @@ class ShedSession:
                  serve: Optional[str] = None,
                  mesh: Optional[Any] = None,
                  shard_cameras: Optional[bool] = None,
-                 fleet_aggregate: bool = False) -> None:
+                 fleet_aggregate: bool = False,
+                 cascade: Optional[Any] = None) -> None:
         if num_cameras < 1:
             raise ValueError("num_cameras must be >= 1")
         self.query = query
         self.num_cameras = int(num_cameras)
         self.model = model
+        # semantic cascade (repro.cascade.Cascade, duck-typed: .scorer /
+        # .gate_fraction / .window) — strictly opt-in; None leaves every
+        # decision bit-identical to the single-stage pipeline
+        self.cascade = cascade
+        self._gate_fraction = (float(getattr(cascade, "gate_fraction", 0.5))
+                               if cascade is not None else 0.5)
+        s2_window = (int(getattr(cascade, "window", 1024))
+                     if cascade is not None else 64)
+        if cascade is not None and (mesh is not None or shard_cameras):
+            raise ValueError(
+                "cascade= is not supported with camera sharding yet: the "
+                "stage-2 scorer is a host call and the sharded serve plane "
+                "is a single device program")
         self.latency_inputs = latency_inputs or LatencyInputs()
         self.ewma_alpha = float(ewma_alpha)
         self.ewma_alpha_up = float(ewma_alpha_up)
@@ -614,7 +845,7 @@ class ShedSession:
         self.state = SessionState.fresh(
             num_cameras, npix, cdf_window=cdf_window, fps=query.fps,
             queue_size=queue_size, queue_capacity=queue_capacity,
-            xp=self._xp)
+            s2_window=s2_window, xp=self._xp)
         if self.mesh is not None:
             from repro.core import fleet as _fleet
             self._shardings = _fleet.state_shardings(
@@ -721,6 +952,9 @@ class ShedSession:
                 ("q_util", np.full((K,), -np.inf, np.float32)),
                 ("q_seq", np.full((K,), -1, np.int32)),
                 ("rate_floor", np.float32(self._rate_floor_host)),
+                ("s2_len", 0), ("s2_pos", 0),
+                ("s2_threshold",
+                 np.float32(-np.inf if active else np.inf)),
                 ("active", bool(active))):
             self._write_lane(name, lane, v)
         if self.state.bg.shape[1]:
@@ -864,6 +1098,7 @@ class ShedSession:
 
     def step(self, frames: Optional[np.ndarray] = None, *,
              utilities: Optional[np.ndarray] = None,
+             s2_utilities: Optional[np.ndarray] = None,
              items: Optional[Sequence[Sequence[Any]]] = None,
              tick: bool = True,
              impl: Optional[str] = None,
@@ -880,6 +1115,15 @@ class ShedSession:
         ``serve="host"`` scoring is the jitted ingest oracle and the
         control plane is its vectorized-NumPy twin.
 
+        With a session ``cascade``, a frames step additionally runs the
+        stage-2 semantic scorer over the color-gate survivors (batched,
+        on the foreground-bbox ROIs the ingest kernel computes in the
+        same dispatch) and applies the stage-2 threshold before queue
+        insertion; queues are then ordered by the SEMANTIC score.
+        ``s2_utilities`` (C, T) supplies precomputed stage-2 scores with
+        ``utilities`` — the control-plane-only cascade form. A
+        utilities-only step on a cascade session runs stage 1 alone.
+
         ``items[c][t]`` are frame payloads for ``next_frame``; absent,
         queued frames are identified by their ``(cam, t)`` index pair.
         Only compact decision/eviction arrays return to the host — see
@@ -887,6 +1131,15 @@ class ShedSession:
         """
         if (frames is None) == (utilities is None):
             raise ValueError("pass exactly one of frames= or utilities=")
+        if s2_utilities is not None and self.cascade is None:
+            raise ValueError("s2_utilities= needs a session cascade")
+        if s2_utilities is not None and frames is not None:
+            raise ValueError("s2_utilities= goes with utilities=, not "
+                             "frames= (frames are scored by the cascade)")
+        if self.cascade is not None and (frames is not None
+                                         or s2_utilities is not None):
+            return self._cascade_step(frames, utilities, s2_utilities,
+                                      items, tick, impl, interpret)
         kw = dict(update_cdf=self.update_cdf_online, do_tick=bool(tick),
                   min_proc=self.min_proc, budget=self._budget,
                   num_total=self._num_active)
@@ -953,9 +1206,89 @@ class ShedSession:
                 self.state, util, None, **kw)
         return self._absorb_control(out, items, tick)
 
+    def _cascade_step(self, frames, utilities, s2_utilities, items, tick,
+                      impl, interpret) -> StepResult:
+        """Two-stage serve step: stage-1 gate -> batched stage-2 scoring
+        of the survivors -> stage-2 gate -> queue insertion. Three
+        dispatches instead of one (the scorer is a host call between two
+        jitted control phases); ingest still runs fused, with the
+        foreground bbox rider supplying the scorer's ROIs for free."""
+        kwt = dict(do_tick=bool(tick), min_proc=self.min_proc,
+                   budget=self._budget, gate_fraction=self._gate_fraction,
+                   num_total=self._num_active)
+        bbox = None
+        if frames is not None:
+            if self.model is None:
+                raise ValueError("step(frames=...) needs a trained model "
+                                 "(call fit() or pass model=)")
+            frames = self._check_frames(frames)
+            if frames.shape[1] == 0:
+                raise ValueError("empty frame batch")
+            q = self.query
+            st = self.state
+            state_in = (IngestState(bg=st.bg, gain=st.gain)
+                        if bool(st.bg_valid) else None)
+            _, _, util, state_out, bbox = ingest_pipeline(
+                frames, q.colors, self.model, state=state_in,
+                alpha=q.alpha, threshold=q.threshold,
+                use_foreground=q.use_foreground, op=q.op, bs=q.bs,
+                bv=q.bv, impl=impl if impl is not None else self.impl,
+                interpret=(interpret if interpret is not None
+                           else self.interpret),
+                with_bbox=True)
+            xp = self._xp
+            st.bg = xp.asarray(state_out.bg, xp.float32)
+            st.gain = xp.asarray(state_out.gain, xp.float32).reshape(-1)
+            st.bg_valid = xp.asarray(True)
+            util = np.asarray(util, np.float32)
+            bbox = np.asarray(bbox, np.int32)
+        else:
+            util = np.asarray(utilities, np.float32)
+            if util.ndim == 1:
+                util = util[None]
+            if util.shape[0] != self.num_cameras:
+                raise ValueError(
+                    f"expected ({self.num_cameras}, T) utilities, "
+                    f"got {util.shape}")
+            if util.shape[1] == 0:
+                raise ValueError("empty utility batch")
+        present = np.ones(util.shape, bool)
+        # phase A: stage-1 CDF push + color gate
+        if self.serve == "device":
+            self.state, pass1 = _cascade_admit_dev(
+                self.state, jnp.asarray(util), jnp.asarray(present),
+                update_cdf=self.update_cdf_online)
+            pass1 = np.asarray(pass1)
+        else:
+            pass1 = _cascade_admit_host(
+                self.state, util, present,
+                update_cdf=self.update_cdf_online)
+        # stage-2 scoring — ONE batched scorer call over the survivors
+        if s2_utilities is not None:
+            s2 = np.asarray(s2_utilities, np.float32).reshape(util.shape)
+        else:
+            s2 = np.zeros(util.shape, np.float32)
+            r, t = np.nonzero(pass1)
+            if r.size:
+                s2[r, t] = np.asarray(
+                    self.cascade.scorer.score(
+                        np.ascontiguousarray(frames[r, t]), bbox[r, t]),
+                    np.float32)
+        # phase B: stage-2 ring/gate + queue insertion + optional tick
+        if self.serve == "device":
+            self.state, out = _cascade_finish_dev(
+                self.state, jnp.asarray(s2), jnp.asarray(present),
+                jnp.asarray(pass1), **kwt)
+        else:
+            self.state, out = _cascade_finish_core_host(
+                self.state, s2, present, pass1, **kwt)
+        return self._absorb_control(out, items, tick, s2_scores=s2)
+
     def _absorb_control(self, out: Dict[str, Any],
                         items: Optional[Sequence[Sequence[Any]]],
-                        ticked: bool) -> StepResult:
+                        ticked: bool,
+                        s2_scores: Optional[np.ndarray] = None
+                        ) -> StepResult:
         """Fold a control step's compact outputs into host bookkeeping:
         stats, payload registry, per-camera counters."""
         decisions = np.asarray(out["decisions"])
@@ -966,6 +1299,7 @@ class ShedSession:
         offered = decisions >= 0
         self.stats.offered += int(offered.sum())
         self.stats.dropped_admission += int((decisions == SHED_ADMISSION).sum())
+        self.stats.dropped_cascade += int((decisions == SHED_CASCADE).sum())
         self.stats.dropped_queue += int(push_ev.sum())
         self.per_camera_offered += offered.sum(axis=1)
         res_cnt = (ev_res >= 0).sum(axis=1)
@@ -995,7 +1329,8 @@ class ShedSession:
                     evicted[c] = np.concatenate(
                         [evicted[c], evs.astype(np.int64)])
         return StepResult(decisions=decisions, pushed_seq=pushed_seq,
-                          evicted=evicted, target_drop_rate=rates)
+                          evicted=evicted, target_drop_rate=rates,
+                          s2_scores=s2_scores)
 
     # -- fleet observability (sharded sessions) ------------------------------
 
@@ -1238,7 +1573,19 @@ class ShedSession:
         """Re-derive per-camera thresholds (Eq. 17–19) and queue sizes
         (Eq. 20) from the current metric lanes — one batched quantile +
         queue resize over all C camera lanes."""
-        if self.serve == "device":
+        if self.cascade is not None:
+            if self.serve == "device":
+                self.state, rates, resize_ev = _cascade_tick_dev(
+                    self.state, min_proc=self.min_proc,
+                    budget=self._budget,
+                    gate_fraction=self._gate_fraction,
+                    num_total=self._num_active)
+                rates, resize_ev = np.asarray(rates), np.asarray(resize_ev)
+            else:
+                rates, resize_ev = _cascade_tick_core_host(
+                    self.state, self.min_proc, self._budget,
+                    self._gate_fraction, num_total=self._num_active)
+        elif self.serve == "device":
             if self.mesh is not None:
                 from repro.core import fleet as _fleet
                 self.state, rates, resize_ev = _fleet.tick(
@@ -1269,7 +1616,7 @@ class ShedSession:
         # aggregate over LIVE lanes only — detached lanes carry rate 0 /
         # threshold +inf and would skew the means (all-active: identical)
         act = self._active_host
-        return {
+        snap = {
             "target_drop_rate": float(rates[act].mean()) if act.any()
             else 0.0,
             "threshold": float(threshold[finite].mean()) if finite.any()
@@ -1281,6 +1628,13 @@ class ShedSession:
                 "queue_size": queue_cap.tolist(),
             },
         }
+        if self.cascade is not None:
+            s2_th = np.asarray(st.s2_threshold)
+            fin2 = np.isfinite(s2_th)
+            snap["s2_threshold"] = (float(s2_th[fin2].mean())
+                                    if fin2.any() else -np.inf)
+            snap["per_camera"]["s2_threshold"] = s2_th.tolist()
+        return snap
 
     # -- checkpoint / restore (serve-path state) -----------------------------
 
@@ -1402,7 +1756,7 @@ def open_session(query: Query, num_cameras: int = 1, **kw: Any) -> ShedSession:
 
 
 __all__ = [
-    "ADMIT", "SHED_ADMISSION", "SHED_QUEUE",
+    "ADMIT", "SHED_ADMISSION", "SHED_QUEUE", "SHED_CASCADE",
     "IngestResult", "Query", "SessionState", "ShedSession", "StepResult",
     "open_session",
 ]

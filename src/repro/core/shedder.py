@@ -25,11 +25,13 @@ class ShedderStats:
     offered: int = 0
     dropped_admission: int = 0
     dropped_queue: int = 0
+    dropped_cascade: int = 0    # stage-2 sheds (sessions with cascade=)
     sent: int = 0
 
     @property
     def dropped(self) -> int:
-        return self.dropped_admission + self.dropped_queue
+        return (self.dropped_admission + self.dropped_queue
+                + self.dropped_cascade)
 
     def drop_rate(self) -> float:
         return self.dropped / self.offered if self.offered else 0.0

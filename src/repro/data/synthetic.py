@@ -105,7 +105,7 @@ def _base_background(rng, T, H, W, clutter_colors: Sequence[str],
 
 
 def _spawn_vehicles(rng, T, H, W, color_mix: dict, rate: float,
-                    next_id: int, scale: float = 1.0) -> Tuple[List[Vehicle], int]:
+                    next_id: int, scale=1.0) -> Tuple[List[Vehicle], int]:
     vehicles = []
     names = list(color_mix)
     probs = np.asarray([color_mix[n] for n in names], np.float64)
@@ -119,8 +119,15 @@ def _spawn_vehicles(rng, T, H, W, color_mix: dict, rate: float,
             break
         name = str(rng.choice(names, p=probs))
         hc, hs, (slo, shi), (vlo, vhi) = VEHICLE_PALETTE[name]
-        h = max(2, int(rng.integers(H // 10, H // 5) * scale))
-        w = max(3, int(rng.integers(W // 8, W // 4) * scale))
+        # scale may be a (lo, hi) range: per-vehicle size jitter (tiny
+        # below-min_blob blobs next to full-size ones — identical PF
+        # signatures, different ground truth; the cascade benchmark's
+        # scenario). A scalar draws nothing extra, so the default RNG
+        # stream is unchanged.
+        sc = (float(rng.uniform(scale[0], scale[1]))
+              if isinstance(scale, (tuple, list)) else float(scale))
+        h = max(2, int(rng.integers(H // 10, H // 5) * sc))
+        w = max(3, int(rng.integers(W // 8, W // 4) * sc))
         speed = float(rng.uniform(W / 80, W / 25)) * (1 if rng.random() < 0.5 else -1)
         dur = int(abs((W + w) / speed)) + 1
         vehicles.append(Vehicle(
@@ -134,15 +141,56 @@ def _spawn_vehicles(rng, T, H, W, color_mix: dict, rate: float,
     return vehicles, next_id
 
 
+def _spawn_confusers(rng, T, H, W, colors: Sequence[str],
+                     rate: float) -> List[Vehicle]:
+    """Saturated thin vertical strips (banners/poles/light streaks) in
+    the TARGET palette: the same hue/sat/val distribution as a vehicle
+    — so their PF matrices are indistinguishable from real positives —
+    but a shape no vehicle has, and NO label. The color histogram
+    cannot tell them apart; a shape-aware stage-2 scorer can."""
+    out: List[Vehicle] = []
+    names = [c for c in colors if c in VEHICLE_PALETTE]
+    if not names or rate <= 0:
+        return out
+    t = 0
+    while t < T:
+        t += int(rng.geometric(min(rate, 0.999)))
+        if t >= T:
+            break
+        name = str(rng.choice(names))
+        hc, hs, (slo, shi), (vlo, vhi) = VEHICLE_PALETTE[name]
+        h = max(8, int(H * 0.45))
+        w = max(2, W // 50)
+        speed = float(rng.uniform(W / 80, W / 25)) * (
+            1 if rng.random() < 0.5 else -1)
+        dur = int(abs((W + w) / speed)) + 1
+        out.append(Vehicle(
+            color_name=name, obj_id=-1, t_enter=t, t_exit=min(T, t + dur),
+            y=int(rng.integers(0, max(1, H - h))), h=h, w=w,
+            speed=speed, x0=(-w if speed > 0 else W),
+            hue=float(np.clip(rng.normal(hc, hs), 0, 179.9)),
+            sat=int(rng.integers(slo, shi)), val=int(rng.integers(vlo, vhi))))
+    return out
+
+
 def generate_scenario(seed: int, num_frames: int = 600, height: int = 96,
                       width: int = 160, vehicle_rate: float = 0.05,
                       color_mix: Optional[dict] = None,
                       target_colors: Sequence[str] = ("red", "yellow"),
                       clutter_density: float = 1.0,
                       illumination_drift: bool = True,
-                      vehicle_scale: float = 1.0,
+                      vehicle_scale=1.0,
+                      confuser_rate: float = 0.0,
                       start_id: int = 0) -> VideoScenario:
-    """Render one camera stream with ground truth."""
+    """Render one camera stream with ground truth.
+
+    ``vehicle_scale`` is a scalar multiplier or a ``(lo, hi)`` range
+    drawn per vehicle (sub-``min_blob`` blobs stay unlabeled).
+    ``confuser_rate > 0`` adds saturated target-palette strips that are
+    histogram-identical to real positives but never labeled — the
+    stimuli separating a semantic cascade from the color stage. Both
+    default to the historical behavior bit-for-bit.
+    """
     rng = np.random.default_rng(seed)
     color_mix = color_mix or {"red": 0.18, "yellow": 0.15, "blue": 0.2,
                               "white": 0.17, "gray": 0.2, "black": 0.1}
@@ -151,6 +199,9 @@ def generate_scenario(seed: int, num_frames: int = 600, height: int = 96,
                           clutter_density=clutter_density)
     vehicles, _ = _spawn_vehicles(rng, num_frames, height, width, color_mix,
                                   vehicle_rate, start_id, scale=vehicle_scale)
+    confusers = (_spawn_confusers(rng, num_frames, height, width,
+                                  target_colors, confuser_rate)
+                 if confuser_rate > 0 else [])
     T, H, W = num_frames, height, width
     frames = np.empty((T, H, W, 3), np.float32)
     labels = {c: np.zeros(T, bool) for c in target_colors}
@@ -186,6 +237,22 @@ def generate_scenario(seed: int, num_frames: int = 600, height: int = 96,
                     rng.normal(hc, hs, (min(5, H - dy), x2 - x1)), 0, 179.9)
                 f[dy:dy + 5, x1:x2, 1] = rng.uniform(slo, shi, (min(5, H - dy), x2 - x1))
                 f[dy:dy + 5, x1:x2, 2] = rng.uniform(max(vlo, 60), vhi, (min(5, H - dy), x2 - x1))
+        # confusers: painted exactly like vehicles (same palette, same
+        # per-pixel noise) but thin — and NEVER labeled
+        for cf in confusers:
+            if not (cf.t_enter <= t < cf.t_exit):
+                continue
+            x = int(cf.x0 + cf.speed * (t - cf.t_enter))
+            x1, x2 = max(0, x), min(W, x + cf.w)
+            if x2 <= x1:
+                continue
+            y1, y2 = cf.y, min(H, cf.y + cf.h)
+            f[y1:y2, x1:x2, 0] = np.clip(
+                cf.hue + rng.normal(0, 1.0, (y2 - y1, x2 - x1)), 0, 179.9)
+            f[y1:y2, x1:x2, 1] = np.clip(
+                cf.sat + rng.normal(0, 6, (y2 - y1, x2 - x1)), 0, 255)
+            f[y1:y2, x1:x2, 2] = np.clip(
+                cf.val + rng.normal(0, 6, (y2 - y1, x2 - x1)), 0, 255)
         # vehicles
         for vh in vehicles:
             if not (vh.t_enter <= t < vh.t_exit):
@@ -213,7 +280,8 @@ def generate_scenario(seed: int, num_frames: int = 600, height: int = 96,
         frames[t] = f
 
     return VideoScenario(frames, labels, objects, busy,
-                         meta={"seed": seed, "vehicles": len(vehicles)})
+                         meta={"seed": seed, "vehicles": len(vehicles),
+                               "confusers": len(confusers)})
 
 
 def generate_dataset(seeds: Sequence[int], **kw) -> List[VideoScenario]:

@@ -172,9 +172,10 @@ def hsv_hist(rgb, fg, hue_ranges, bs: int = B_S, bv: int = B_V,
 
 def _ingest_kernel(rgb_ref, bg0_ref, gain0_ref, m_ref, norm_ref,
                    counts_ref, totals_ref, fgtot_ref, util_ref,
-                   bg_ref, gain_ref, sums_ref,
+                   bg_ref, gain_ref, sums_ref, bbox_ref=None,
                    *, hue_ranges, bs, bv, alpha, threshold, npix,
-                   use_fg, bg_valid, op, num_frames, num_tiles):
+                   use_fg, bg_valid, op, num_frames, num_tiles,
+                   width=0):
     # grid (camera, frame, tile): all state/accumulator blocks are
     # indexed by camera only, so each camera's span reuses its own lane
     t = pl.program_id(1)        # frame (background recurrence is sequential)
@@ -227,6 +228,42 @@ def _ingest_kernel(rgb_ref, bg0_ref, gain0_ref, m_ref, norm_ref,
 
     ts = pl.dslice(t, 1)
 
+    # --- foreground bounding box (the cascade's free ROI): per-tile
+    # masked min/max over (row, col) of the flattened pixel index,
+    # min-combined across tiles; empty frames finalize to all -1
+    if width:
+        pidx = (j * BLOCK
+                + jax.lax.broadcasted_iota(jnp.int32, (BLOCK, 1), 0)[:, 0])
+        rows_px = pidx // width
+        cols_px = pidx % width
+        on = fgf > 0
+        big = jnp.int32(npix)
+        vals = jnp.stack([
+            jnp.min(jnp.where(on, rows_px, big)),
+            jnp.max(jnp.where(on, rows_px, -1)),
+            jnp.min(jnp.where(on, cols_px, big)),
+            jnp.max(jnp.where(on, cols_px, -1))]).astype(jnp.int32)
+
+        @pl.when(j == 0)
+        def _bbox_first():
+            bbox_ref[0, ts, :] = vals[None]
+
+        @pl.when(j > 0)
+        def _bbox_accum():
+            prev = bbox_ref[0, ts, :][0]
+            mn = jnp.minimum(prev, vals)
+            mx = jnp.maximum(prev, vals)
+            # lanes 0/2 are mins, lanes 1/3 are maxes
+            is_min = (jax.lax.broadcasted_iota(jnp.int32, (4, 1), 0)[:, 0]
+                      % 2) == 0
+            bbox_ref[0, ts, :] = jnp.where(is_min, mn, mx)[None]
+
+        @pl.when(j == num_tiles - 1)
+        def _bbox_final():
+            cur = bbox_ref[0, ts, :][0]
+            bbox_ref[0, ts, :] = jnp.where(cur[1] < 0, jnp.int32(-1),
+                                           cur)[None]
+
     @pl.when(j == 0)
     def _first_tile():
         counts_ref[0, ts, :, :] = counts_t[None]
@@ -255,12 +292,12 @@ def _ingest_kernel(rgb_ref, bg0_ref, gain0_ref, m_ref, norm_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "hue_ranges", "bs", "bv", "alpha", "threshold", "use_fg", "bg_valid",
-    "op", "interpret"))
+    "op", "interpret", "width"))
 def ingest_batch(rgb, bg0, gain0, M_pos, norm, hue_ranges,
                  bs: int = B_S, bv: int = B_V, *, alpha: float = 0.05,
                  threshold: float = 18.0, use_fg: bool = True,
                  bg_valid: bool = True, op: str = "or",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, width: int = 0):
     """Fused batched ingest: one pallas_call for a whole camera array.
 
     rgb:   (T, N, 3) float32 RGB in [0, 255] (frames flattened to
@@ -274,7 +311,11 @@ def ingest_batch(rgb, bg0, gain0, M_pos, norm, hue_ranges,
 
     Returns (counts (T, nc, bs*bv), totals (T, nc), fg_total (T,),
              utility (T,), bg (N,), gain ()) — each with a leading
-    camera lane iff the input had one.
+    camera lane iff the input had one. ``width > 0`` (the frame's
+    pixel-row stride) appends a per-frame foreground bounding box
+    ``(T, 4)`` int32 ``(row_min, row_max, col_min, col_max)``, all
+    ``-1`` for empty masks — the in-kernel ROI for the semantic
+    cascade, accumulated tile-by-tile at zero extra passes.
     """
     interpret = _resolve_interpret(interpret)
     has_cams = rgb.ndim == 4
@@ -294,11 +335,34 @@ def ingest_batch(rgb, bg0, gain0, M_pos, norm, hue_ranges,
     nc = len(hue_ranges)
     nb = bs * bv
 
-    counts, totals, fgtot, util, bg, gain, _sums = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, T, nc, nb), lambda c, t, j: (c, 0, 0, 0)),
+        pl.BlockSpec((1, T, nc), lambda c, t, j: (c, 0, 0)),
+        pl.BlockSpec((1, T), lambda c, t, j: (c, 0)),
+        pl.BlockSpec((1, T), lambda c, t, j: (c, 0)),
+        pl.BlockSpec((1, npad), lambda c, t, j: (c, 0)),
+        pl.BlockSpec((1, 1), lambda c, t, j: (c, 0)),
+        pl.BlockSpec((1, 2), lambda c, t, j: (c, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((C, T, nc, nb), jnp.float32),
+        jax.ShapeDtypeStruct((C, T, nc), jnp.float32),
+        jax.ShapeDtypeStruct((C, T), jnp.float32),
+        jax.ShapeDtypeStruct((C, T), jnp.float32),
+        jax.ShapeDtypeStruct((C, npad), jnp.float32),
+        jax.ShapeDtypeStruct((C, 1), jnp.float32),
+        jax.ShapeDtypeStruct((C, 2), jnp.float32),
+    ]
+    if width:
+        out_specs.append(pl.BlockSpec((1, T, 4), lambda c, t, j: (c, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((C, T, 4), jnp.int32))
+
+    results = pl.pallas_call(
         functools.partial(
             _ingest_kernel, hue_ranges=hue_ranges, bs=bs, bv=bv,
             alpha=alpha, threshold=threshold, npix=n, use_fg=use_fg,
-            bg_valid=bg_valid, op=op, num_frames=T, num_tiles=num_tiles),
+            bg_valid=bg_valid, op=op, num_frames=T, num_tiles=num_tiles,
+            width=int(width)),
         grid=(C, T, num_tiles),
         in_specs=[
             pl.BlockSpec((1, 1, BLOCK, 3), lambda c, t, j: (c, t, j, 0)),
@@ -307,28 +371,15 @@ def ingest_batch(rgb, bg0, gain0, M_pos, norm, hue_ranges,
             pl.BlockSpec((nc, nb), lambda c, t, j: (0, 0)),
             pl.BlockSpec((1, nc), lambda c, t, j: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, T, nc, nb), lambda c, t, j: (c, 0, 0, 0)),
-            pl.BlockSpec((1, T, nc), lambda c, t, j: (c, 0, 0)),
-            pl.BlockSpec((1, T), lambda c, t, j: (c, 0)),
-            pl.BlockSpec((1, T), lambda c, t, j: (c, 0)),
-            pl.BlockSpec((1, npad), lambda c, t, j: (c, 0)),
-            pl.BlockSpec((1, 1), lambda c, t, j: (c, 0)),
-            pl.BlockSpec((1, 2), lambda c, t, j: (c, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((C, T, nc, nb), jnp.float32),
-            jax.ShapeDtypeStruct((C, T, nc), jnp.float32),
-            jax.ShapeDtypeStruct((C, T), jnp.float32),
-            jax.ShapeDtypeStruct((C, T), jnp.float32),
-            jax.ShapeDtypeStruct((C, npad), jnp.float32),
-            jax.ShapeDtypeStruct((C, 1), jnp.float32),
-            jax.ShapeDtypeStruct((C, 2), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(rgb.astype(jnp.float32), bg0, gain0,
       M_pos.astype(jnp.float32), norm.astype(jnp.float32)[None])
+    counts, totals, fgtot, util, bg, gain = results[:6]
+    out = [counts, totals, fgtot, util, bg[:, :n], gain[:, 0]]
+    if width:
+        out.append(results[7])
     if has_cams:
-        return counts, totals, fgtot, util, bg[:, :n], gain[:, 0]
-    return (counts[0], totals[0], fgtot[0], util[0], bg[0, :n],
-            gain[0, 0])
+        return tuple(out)
+    return tuple(o[0] for o in out)

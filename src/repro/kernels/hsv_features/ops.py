@@ -76,7 +76,8 @@ class IngestState:
 
 
 def ingest_core(rgb, bg0, gain0, M_pos, norm, *, hue_ranges, bs, bv,
-                alpha, threshold, use_fg, bg_valid, op, impl, interpret):
+                alpha, threshold, use_fg, bg_valid, op, impl, interpret,
+                width: int = 0):
     """Traceable fused-ingest dispatch — the raw kernel/oracle call with
     NO host-side jit wrapper of its own, so callers building larger
     device programs (e.g. the session's fused serve step) can trace it
@@ -84,24 +85,26 @@ def ingest_core(rgb, bg0, gain0, M_pos, norm, *, hue_ranges, bs, bv,
 
     rgb: (T, N, 3) or (C, T, N, 3) float32 (frames flattened to
     pixels). Returns the kernel tuple (counts, totals, fg_total,
-    utility, bg, gain).
+    utility, bg, gain); ``width > 0`` appends the per-frame foreground
+    bounding box (the cascade's ROI — see ``foreground_bbox``).
     """
     if impl == "pallas":
         return ingest_batch(
             rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv, alpha=alpha,
             threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op,
-            interpret=interpret)
+            interpret=interpret, width=width)
     if impl == "jnp":
         return ingest_batch_ref(
             rgb, bg0, gain0, M_pos, norm, hue_ranges, bs, bv, alpha=alpha,
-            threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op)
+            threshold=threshold, use_fg=use_fg, bg_valid=bg_valid, op=op,
+            width=width)
     raise ValueError(f"unknown ingest impl {impl!r}")
 
 
 _ingest_jnp = jax.jit(
     functools.partial(ingest_core, impl="jnp", interpret=None),
     static_argnames=("hue_ranges", "bs", "bv", "alpha", "threshold",
-                     "use_fg", "bg_valid", "op"))
+                     "use_fg", "bg_valid", "op", "width"))
 
 
 def default_impl() -> str:
@@ -137,14 +140,17 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
                     use_foreground: bool = True, op: Optional[str] = None,
                     bs: int = B_S, bv: int = B_V,
                     impl: Optional[str] = None,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    with_bbox: bool = False):
     """Fused ingest for one frame batch — one device dispatch.
 
     rgb: (T, H, W, 3) float32 RGB in [0, 255], or (C, T, H, W, 3) for a
     C-camera array (state then carries per-camera ``(bg, gain)`` lanes).
     Returns (pf (T, nc, bs, bv), hf (T, nc), util (T,) | None, state'),
     each with a leading camera lane iff the input had one. ``util`` is
-    None when no trained ``model`` is supplied.
+    None when no trained ``model`` is supplied. ``with_bbox=True``
+    appends the per-frame foreground bounding box (``(T, 4)`` int32,
+    all -1 when the mask is empty) — the semantic cascade's free ROI.
     """
     impl = impl or default_impl()
     hue_ranges = tuple(tuple(c.hue_ranges) for c in colors)
@@ -152,6 +158,7 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
     has_cams = rgb.ndim == 5
     lead = rgb.shape[:2] if has_cams else rgb.shape[:1]
     n = rgb.shape[-3] * rgb.shape[-2]
+    width = int(rgb.shape[-2]) if with_bbox else 0
     rgb_flat = jnp.asarray(rgb, jnp.float32).reshape(*lead, n, 3)
     bg_shape = (lead[0], n) if has_cams else (n,)
 
@@ -163,23 +170,27 @@ def ingest_pipeline(rgb, colors: Sequence[Color],
     M_pos, norm, op = query_constants(model, nc, bs, bv, op)
 
     if impl == "pallas":
-        counts, totals, fgtot, util, bg, gain = ingest_core(
+        res = ingest_core(
             rgb_flat, bg0, gain0, M_pos, norm, hue_ranges=hue_ranges,
             bs=bs, bv=bv, alpha=alpha, threshold=threshold,
             use_fg=use_foreground, bg_valid=bg_valid, op=op,
-            impl="pallas", interpret=interpret)
+            impl="pallas", interpret=interpret, width=width)
     elif impl == "jnp":
-        counts, totals, fgtot, util, bg, gain = _ingest_jnp(
+        res = _ingest_jnp(
             rgb_flat, bg0, gain0, M_pos, norm, hue_ranges=hue_ranges,
             bs=bs, bv=bv, alpha=alpha, threshold=threshold,
-            use_fg=use_foreground, bg_valid=bg_valid, op=op)
+            use_fg=use_foreground, bg_valid=bg_valid, op=op, width=width)
     else:
         raise ValueError(f"unknown ingest impl {impl!r}")
+    counts, totals, fgtot, util, bg, gain = res[:6]
 
     pf = pf_from_counts(counts, totals, bs, bv)
     hf = totals / jnp.maximum(fgtot, 1.0)[..., None]
     new_state = IngestState(bg=bg, gain=gain)
-    return pf, hf, (util if model is not None else None), new_state
+    out = (pf, hf, (util if model is not None else None), new_state)
+    if with_bbox:
+        return out + (res[6],)
+    return out
 
 
 __all__ = ["frame_pf", "batch_pf", "ingest_pipeline", "ingest_core",

@@ -123,10 +123,36 @@ def _masked_hist(joint, weights, nb: int):
         jnp.float32).reshape(*lead, nc, nb)
 
 
+def foreground_bbox(fgf, width: int):
+    """Per-frame bounding box of the foreground mask, over flattened
+    pixels.
+
+    fgf: (..., N) {0, 1} foreground weights; ``width`` is the frame's
+    pixel-row stride (N = H * W). Returns (..., 4) int32
+    ``(row_min, row_max, col_min, col_max)`` — inclusive bounds — or
+    all ``-1`` for frames with no foreground. This is the "free ROI"
+    the cascade's semantic scorer crops to.
+    """
+    n = fgf.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    rows = idx // width
+    cols = idx % width
+    big = jnp.int32(n)
+    on = fgf > 0
+    rmin = jnp.min(jnp.where(on, rows, big), axis=-1)
+    rmax = jnp.max(jnp.where(on, rows, -1), axis=-1)
+    cmin = jnp.min(jnp.where(on, cols, big), axis=-1)
+    cmax = jnp.max(jnp.where(on, cols, -1), axis=-1)
+    empty = ~jnp.any(on, axis=-1)
+    bbox = jnp.stack([rmin, rmax, cmin, cmax], axis=-1).astype(jnp.int32)
+    return jnp.where(empty[..., None], jnp.int32(-1), bbox)
+
+
 def ingest_batch_ref(rgb, bg0, gain0, M_pos, norm, hue_ranges,
                      bs: int = B_S, bv: int = B_V, *, alpha: float = 0.05,
                      threshold: float = 18.0, use_fg: bool = True,
-                     bg_valid: bool = True, op: str = "or"):
+                     bg_valid: bool = True, op: str = "or",
+                     width: int = 0):
     """Oracle for ``kernel.ingest_batch`` (same signature/returns).
 
     rgb: (T, N, 3) float32, or (C, T, N, 3) with bg0 (C, N) and
@@ -136,6 +162,10 @@ def ingest_batch_ref(rgb, bg0, gain0, M_pos, norm, hue_ranges,
     runs the frame-parallel stages over all C*T frames at once and one
     background scan with a batched (C, N) carry — per-camera results
     are bit-identical to C independent single-camera runs.
+
+    ``width > 0`` (the frame's pixel-row stride) appends a per-frame
+    foreground bounding box ``(T, 4)`` int32 (``foreground_bbox``) to
+    the returned tuple — the cascade's free ROI.
     """
     has_cams = rgb.ndim == 4
     if not has_cams:
@@ -164,6 +194,9 @@ def ingest_batch_ref(rgb, bg0, gain0, M_pos, norm, hue_ranges,
     u = jnp.sum(pf * M_pos.reshape(1, 1, *M_pos.shape), axis=-1)
     u = u / jnp.maximum(norm, 1e-9)[None, None]
     util = jnp.min(u, axis=-1) if op == "and" else jnp.max(u, axis=-1)
+    out = [counts, totals, fgtot, util, bg, gain]
+    if width:
+        out.append(foreground_bbox(fgf, int(width)))     # (C, T, 4)
     if has_cams:
-        return counts, totals, fgtot, util, bg, gain
-    return (counts[0], totals[0], fgtot[0], util[0], bg[0], gain[0])
+        return tuple(out)
+    return tuple(o[0] for o in out)

@@ -242,7 +242,7 @@ class ServeService:
         self._ingress: "_queue.SimpleQueue[Arrival]" = _queue.SimpleQueue()
         self._stopped = False
         self._t_start: Optional[float] = None
-        self._stats0 = (0, 0, 0, 0)
+        self._stats0 = (0, 0, 0, 0, 0)
         self._ctrl_scheduled = False
         self._pending_wake: Optional[float] = None
         self._rate_floor = 0.0
@@ -297,14 +297,25 @@ class ServeService:
         m, sess = self.metrics, self.session
         d0 = sess.stats.dropped_admission
         q0 = sess.stats.dropped_queue
+        c0 = getattr(sess.stats, "dropped_cascade", 0)
         if (batch.rectangular and batch.has_frames
                 and getattr(sess, "step", None) is not None
                 and getattr(sess, "model", None) is not None):
             frames = np.stack([np.stack([e.frame for e in l])
                                for l in batch.per_cam])
             items = [[e.record for e in l] for l in batch.per_cam]
-            sess.step(frames=frames, items=items, tick=False)
+            res = sess.step(frames=frames, items=items, tick=False)
             m.counter("dispatch.fused").inc()
+            s2 = getattr(res, "s2_scores", None)
+            if s2 is not None:
+                from repro.core.session import SHED_ADMISSION
+                # stage-2 score distribution over the color-gate
+                # survivors (cascade sheds included) — the scorer's
+                # health view; stage-1 sheds never reached the scorer
+                dec = np.asarray(res.decisions)
+                h = m.histogram("cascade.s2_score")
+                for v in s2[(dec >= 0) & (dec != SHED_ADMISSION)].tolist():
+                    h.observe(float(v))
         else:
             recs, utils, lanes = [], [], []
             for li, entries in enumerate(batch.per_cam):
@@ -339,6 +350,9 @@ class ServeService:
         m.counter("ingest.offered").inc(batch.count)
         m.counter("shed.admission").inc(sess.stats.dropped_admission - d0)
         m.counter("shed.queue").inc(sess.stats.dropped_queue - q0)
+        dc = getattr(sess.stats, "dropped_cascade", 0) - c0
+        if dc:
+            m.counter("shed.cascade").inc(dc)
         self._observe_queue_depth()
 
     def _pump(self, now: float) -> None:
@@ -464,7 +478,8 @@ class ServeService:
         self._stats0 = (self.session.stats.offered,
                         self.session.stats.dropped_admission,
                         self.session.stats.dropped_queue,
-                        self.session.stats.sent)
+                        self.session.stats.sent,
+                        getattr(self.session.stats, "dropped_cascade", 0))
 
     def submit(self, arrival: Arrival) -> None:
         """Enqueue one arrival into the (possibly running) event loop.
@@ -563,6 +578,9 @@ class ServeService:
             "shed_rate": 1.0 - n_proc / max(1, n_off),
             "shed_admission_rate":
                 (st.dropped_admission - self._stats0[1]) / max(1, n_off),
+            "shed_cascade_rate":
+                (getattr(st, "dropped_cascade", 0) - self._stats0[4])
+                / max(1, n_off),
             "violation_rate": violations / max(1, n_proc),
             "backend_utilization":
                 m.counter("backend.busy_s").value / (elapsed * self.tokens),

@@ -20,6 +20,20 @@ def make_train_step(cfg, opt: AdamW):
     return train_step
 
 
+def make_scorer_train_step(loss_fn, opt: AdamW, jit: bool = True):
+    """Generic supervised step for small heads (e.g. the cascade's
+    semantic scorer): ``loss_fn(params, batch) -> (loss, metrics)``.
+    Same (params, opt_state, batch) contract as ``make_train_step`` but
+    parameterized over the loss so this module stays model-agnostic.
+    """
+    def scorer_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics, "loss": loss}
+    return jax.jit(scorer_step) if jit else scorer_step
+
+
 def make_prefill_step(cfg, max_seq: int):
     def prefill_step(params, batch):
         return lm_prefill(cfg, params, batch, max_seq=max_seq)

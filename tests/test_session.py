@@ -226,7 +226,7 @@ def test_offer_lane_mapping_and_limit():
 def test_session_state_is_pytree():
     st = SessionState.fresh(3, 10)
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == 17          # incl. queue lanes + churn/floor lanes
+    assert len(leaves) == 21          # incl. queue/churn/floor + s2 lanes
     st2 = jax.tree_util.tree_map(lambda x: x, st)
     assert isinstance(st2, SessionState)
     assert st2.bg.shape == (3, 10)
