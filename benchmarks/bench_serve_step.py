@@ -151,10 +151,12 @@ def _trace(C: int, T: int, steps: int, rng):
 
 
 def _mk_session(C: int, serve: str, hist, *, cdf_window=4096):
+    # exact_tick: this bench's contract is bit-parity with the
+    # seed-style host loop's exact sort quantile
     return open_session(
         Query.single("red", latency_bound=1.0, fps=10.0), num_cameras=C,
         train_utilities=hist, queue_size=8, queue_capacity=64,
-        cdf_window=cdf_window, serve=serve)
+        cdf_window=cdf_window, serve=serve, exact_tick=True)
 
 
 def _parity_and_time(C: int, T: int, steps: int, reps: int, rng):

@@ -1,0 +1,222 @@
+"""Transmission-control benchmark: batched top-k pops + O(bins) ticks.
+
+Two serve-path hot spots that used to pay per-frame / per-window host
+work:
+
+  * **Pops** — draining the send queue one ``next_frame()`` at a time
+    scans the whole ``(C, K)`` lane array per frame (and on the device
+    path pays one dispatch + host sync per frame). ``next_frames(k)``
+    pops the same frames in the same order with ONE top-k selection.
+    The benchmark times the queue-layer twins directly (sequential
+    ``pop_best_host`` loop vs one ``pop_topk_host`` call, ditto the
+    jitted device twins) and verifies bit-exact sequence parity at the
+    session level, including the camera-sharded fleet path.
+
+  * **Ticks** — Eq. 17 thresholds from a per-camera sort of the
+    ``(C, W)`` utility window vs the O(bins) cumsum over the session's
+    incrementally-maintained ``(C, bins)`` bucket counts. The benchmark
+    times ``_tick_core_host`` both ways on full ``W=4096`` windows and
+    bounds the threshold drift (bucket ticks always sit within one
+    bucket width ABOVE the exact quantile).
+
+Acceptance facts asserted here (and re-asserted by CI from
+``BENCH_serve.json``): sequence parity, drift <= one bucket width,
+pops/sec >= 3x and tick latency >= 5x vs the status quo at C=32 on CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Query, open_session
+from repro.core import shed_queue as sq
+from repro.core.session import TickConfig, _tick_core_host
+from repro.core.threshold import (
+    thresholds_from_counts_host,
+    thresholds_from_lanes_host,
+)
+from benchmarks.common import Timer, median_ms
+
+BENCH_SEED = 0
+
+
+def _filled_lanes(C, K, rng):
+    util = rng.uniform(0, 1, (C, K)).astype(np.float32)
+    seq = np.arange(C * K, dtype=np.int32).reshape(C, K)
+    return util, seq
+
+
+def _drain_host(util, seq, n):
+    for _ in range(n):
+        sq.pop_best_host(util, seq)
+
+
+def _pop_timing(C, K, n, reps, rng):
+    """Queue-layer twins: sequential pop_best loop vs one top-k call,
+    popping ``n`` frames from full (C, K) lanes. Copies inside the
+    timed closure cost the same on both sides."""
+    util, seq = _filled_lanes(C, K, rng)
+
+    t_seq = median_ms(lambda: _drain_host(util.copy(), seq.copy(), n),
+                      n=reps)
+    t_bat = median_ms(lambda: sq.pop_topk_host(util.copy(), seq.copy(), n),
+                      n=reps)
+
+    # device twins (XLA-on-CPU numbers: the TPU path, for transparency)
+    import jax
+    import jax.numpy as jnp
+    pop1 = jax.jit(sq.pop_best_dev)
+    popk = jax.jit(sq.pop_topk_dev, static_argnames=("k",))
+    du, ds = jnp.asarray(util), jnp.asarray(seq)
+
+    def drain_dev():
+        u, s = du, ds
+        for _ in range(n):
+            u, s, _, _ = pop1(u, s)
+        u.block_until_ready()
+
+    def batch_dev():
+        u, s, _, _ = popk(du, ds, n)
+        u.block_until_ready()
+
+    drain_dev()                     # warm the jits
+    batch_dev()
+    t_seq_dev = median_ms(drain_dev, n=max(3, reps // 3))
+    t_bat_dev = median_ms(batch_dev, n=reps)
+    return {
+        "cameras": C, "lanes": K, "pops": n,
+        "sequential_ms": t_seq, "batched_ms": t_bat,
+        "sequential_device_ms": t_seq_dev, "batched_device_ms": t_bat_dev,
+        "pop_speedup": t_seq / t_bat,
+        "pops_per_s_batched": n / (t_bat * 1e-3),
+    }
+
+
+def _session_parity(rng, C=32, *, fleet=False):
+    """next_frames(k) == a next_frame() loop: same payloads, same
+    order, same stats — on twin sessions fed identical admissions."""
+    q = Query.single("red", latency_bound=1.0, fps=10.0)
+    kw = dict(num_cameras=C, queue_size=8, queue_capacity=16,
+              train_utilities=rng.uniform(0, 1, 256).astype(np.float32))
+    if fleet:
+        a = open_session(q, shard_cameras=True, **kw)
+        b = open_session(q, serve="device", **kw)
+    else:
+        a = open_session(q, serve="host", **kw)
+        b = open_session(q, serve="host", **kw)
+    u = rng.uniform(0, 1, (C, 12)).astype(np.float32)
+    items = [[(c, t) for t in range(12)] for c in range(C)]
+    a.admit(u, items=items)
+    b.admit(u, items=items)
+    ok = True
+    for k in (1, 7, 4 * C):
+        batched = a.next_frames(k)
+        looped = []
+        for _ in range(k):
+            it = b.next_frame()
+            if it is None:
+                break
+            looped.append(it)
+        ok &= batched == looped
+    ok &= len(a) == len(b)
+    return bool(ok)
+
+
+def _mk_state(C, W, bins, rng):
+    """A host session with full CDF windows — the steady serving state
+    where every tick pays the whole quantile."""
+    q = Query.single("red", latency_bound=1.0, fps=10.0)
+    sess = open_session(
+        q, num_cameras=C, cdf_window=W, quantile_bins=bins, serve="host",
+        train_utilities=rng.uniform(0, 1, W + 64).astype(np.float32),
+        queue_size=8, queue_capacity=16)
+    sess.report_backend_latency(1.4 / (C * 10.0))
+    return sess
+
+
+def _tick_timing(C, W, bins, reps, rng):
+    """_tick_core_host with the exact lanes sort vs the bucket counts
+    — same state, same control math, only the Eq. 17 quantile differs."""
+    sess = _mk_state(C, W, bins, rng)
+    cfg = sess._tick_cfg
+    exact_cfg = cfg._replace(exact=True)
+    # live= mirrors ShedSession.tick(): the depth cache feeds the
+    # no-eviction resize fast path
+    kw = dict(num_total=sess.num_active, live=sess._depths)
+
+    t_exact = median_ms(
+        lambda: _tick_core_host(sess.state, sess.min_proc, sess._budget,
+                                tick_cfg=exact_cfg, **kw), n=reps)
+    t_bucket = median_ms(
+        lambda: _tick_core_host(sess.state, sess.min_proc, sess._budget,
+                                tick_cfg=cfg, **kw), n=reps)
+
+    # drift bound: bucket threshold within one width ABOVE the exact
+    st = sess.state
+    rates, _ = _tick_core_host(st, sess.min_proc, sess._budget,
+                               tick_cfg=exact_cfg, **kw)
+    exact = thresholds_from_lanes_host(st.cdf_buf, st.cdf_len, rates)
+    bucket = thresholds_from_counts_host(st.cdf_counts, st.cdf_len, rates,
+                                         cfg.lo, cfg.width)
+    live = np.isfinite(exact)
+    drift = float(np.max(bucket[live] - exact[live])) if live.any() else 0.0
+    ok = bool(np.all(bucket[live] >= exact[live] - 1e-7)
+              and drift <= cfg.width * 1.001)
+    return {
+        "cameras": C, "cdf_window": W, "bins": bins,
+        "exact_tick_ms": t_exact, "bucket_tick_ms": t_bucket,
+        "tick_speedup": t_exact / t_bucket,
+        "max_drift": drift, "bucket_width": cfg.width,
+        "drift_ok": ok,
+    }
+
+
+def run(quick=True):
+    rng = np.random.default_rng(BENCH_SEED)
+    reps = 9 if quick else 30
+    W = 4096
+    with Timer() as t:
+        pops = {f"C{C}": _pop_timing(C, 64, 128, reps, rng)
+                for C in (8, 32)}
+        fleet_C = 256 if quick else 1024
+        pops[f"C{fleet_C}_fleet"] = _pop_timing(
+            fleet_C, 16, 256, max(3, reps // 3), rng)
+        parity = _session_parity(rng) and _session_parity(rng, C=8)
+        fleet_parity = _session_parity(rng, C=16, fleet=True)
+        ticks = {f"C{C}": _tick_timing(C, W, 256, reps, rng)
+                 for C in (8, 32)}
+
+    c32p, c32t = pops["C32"], ticks["C32"]
+    derived = {
+        "parity_batched_pop": bool(parity),
+        "parity_fleet_pop": bool(fleet_parity),
+        "drift_within_one_bucket": all(r["drift_ok"]
+                                       for r in ticks.values()),
+        "pop_speedup_c32": c32p["pop_speedup"],
+        "tick_speedup_c32": c32t["tick_speedup"],
+        "pops_per_s_c32": c32p["pops_per_s_batched"],
+        "pops": pops,
+        "ticks": ticks,
+    }
+    if not derived["parity_batched_pop"] or not derived["parity_fleet_pop"]:
+        raise AssertionError("batched next_frames diverged from the "
+                             "sequential next_frame loop")
+    if not derived["drift_within_one_bucket"]:
+        raise AssertionError(
+            f"bucket-tick thresholds drifted beyond one bucket width: "
+            f"{ {k: r['max_drift'] for k, r in ticks.items()} }")
+    if c32p["pop_speedup"] < 3.0:
+        raise AssertionError(
+            f"batched pops {c32p['pop_speedup']:.2f}x < 3x at C=32")
+    if c32t["tick_speedup"] < 5.0:
+        raise AssertionError(
+            f"bucket ticks {c32t['tick_speedup']:.2f}x < 5x at C=32")
+    return {
+        "us_per_call": c32p["batched_ms"] * 1e3,
+        "derived": derived,
+        "elapsed_s": t.dt,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -24,6 +24,7 @@ BENCHES = [
     ("fig13b_14_multicam", "benchmarks.bench_multicam"),
     ("fig15_overhead", "benchmarks.bench_overhead"),
     ("serve_step_fused", "benchmarks.bench_serve_step"),
+    ("transmit_control", "benchmarks.bench_transmit"),
     ("fleet_sharded", "benchmarks.bench_fleet"),
     ("service_streaming", "benchmarks.bench_service"),
     ("scenarios_resilience", "benchmarks.bench_scenarios"),

@@ -196,10 +196,12 @@ def _out_pspecs(axis: AxisName, with_decisions: bool):
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "axis", "num_total", "masked", "update_cdf",
-                     "do_tick", "min_proc", "budget", "aggregate"),
+                     "do_tick", "min_proc", "budget", "aggregate",
+                     "tick_cfg"),
     donate_argnames=("state",))
 def _fleet_control(state, util, present, *, mesh, axis, num_total, masked,
-                   update_cdf, do_tick, min_proc, budget, aggregate):
+                   update_cdf, do_tick, min_proc, budget, aggregate,
+                   tick_cfg=None):
     """Sharded control step: CDF push -> admission -> queue selection ->
     (optional) tick, each camera shard running the identical row-local
     program; one optional psum aggregate tree rides along."""
@@ -211,7 +213,7 @@ def _fleet_control(state, util, present, *, mesh, axis, num_total, masked,
         st, out = _control_core_dev(
             st, u, pres if masked else None, update_cdf=update_cdf,
             do_tick=do_tick, min_proc=min_proc, budget=budget,
-            num_total=num_total)
+            num_total=num_total, tick_cfg=tick_cfg)
         agg = (_local_aggregates(st, axis, out["decisions"]) if aggregate
                else _empty_aggregates(True))
         return st, out, agg
@@ -228,12 +230,12 @@ def _fleet_control(state, util, present, *, mesh, axis, num_total, masked,
     static_argnames=("mesh", "axis", "num_total", "hue_ranges", "bs", "bv",
                      "alpha", "fg_threshold", "use_fg", "bg_valid", "op",
                      "impl", "interpret", "update_cdf", "do_tick",
-                     "min_proc", "budget", "aggregate"),
+                     "min_proc", "budget", "aggregate", "tick_cfg"),
     donate_argnames=("state",))
 def _fleet_serve_step(state, frames, M_pos, norm, *, mesh, axis, num_total,
                       hue_ranges, bs, bv, alpha, fg_threshold, use_fg,
                       bg_valid, op, impl, interpret, update_cdf, do_tick,
-                      min_proc, budget, aggregate):
+                      min_proc, budget, aggregate, tick_cfg=None):
     """The sharded tentpole program: fused ingest -> control, each
     camera shard one self-contained device program (the ingest kernel's
     per-camera background/gain lanes are row-local too)."""
@@ -253,7 +255,8 @@ def _fleet_serve_step(state, frames, M_pos, norm, *, mesh, axis, num_total,
                                  bg_valid=jnp.asarray(True))
         st, out = _control_core_dev(
             st, util, None, update_cdf=update_cdf, do_tick=do_tick,
-            min_proc=min_proc, budget=budget, num_total=num_total)
+            min_proc=min_proc, budget=budget, num_total=num_total,
+            tick_cfg=tick_cfg)
         agg = (_local_aggregates(st, axis, out["decisions"]) if aggregate
                else _empty_aggregates(True))
         return st, out, agg
@@ -267,23 +270,136 @@ def _fleet_serve_step(state, frames, M_pos, norm, *, mesh, axis, num_total,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mesh", "axis", "num_total", "min_proc", "budget"),
+    static_argnames=("mesh", "axis", "num_total", "min_proc", "budget",
+                     "tick_cfg"),
     donate_argnames=("state",))
-def _fleet_tick(state, *, mesh, axis, num_total, min_proc, budget):
-    """Sharded Eq. 18–20 tick: per-shard batched quantile + queue
-    resize; rates use the GLOBAL camera count."""
+def _fleet_tick(state, *, mesh, axis, num_total, min_proc, budget,
+                tick_cfg=None):
+    """Sharded Eq. 18–20 tick: per-shard batched quantile (O(bins) on
+    the incremental bucket counts by default) + queue resize; rates use
+    the GLOBAL camera count."""
     from repro.core.session import SessionState, _tick_core_dev
     st_spec = state_pspecs(SessionState, axis)
 
     def local(st):
         st, rates, resize_ev = _tick_core_dev(st, min_proc, budget,
-                                              num_total)
+                                              num_total, tick_cfg=tick_cfg)
         return st, rates, resize_ev
 
     return shard_map(
         local, mesh=mesh, in_specs=(st_spec,),
         out_specs=(st_spec, P(axis), P(axis)),
         check_rep=False)(state)
+
+
+# ---------------------------------------------------------------------------
+# Sharded batched pop — per-shard-local top-k candidate selection, one
+# small host gather to pick the global best, one donated scatter to
+# clear the popped slots. Top-k is NOT row-local (the global best k
+# frames may all live on one shard), so each shard over-produces
+# min(k, C_local*K) candidates — a superset of its contribution to the
+# global top-k — and the merge is exact.
+# ---------------------------------------------------------------------------
+
+def _shard_offset(mesh: Mesh, axis: AxisName, c_local: int):
+    """Global camera index of this shard's lane 0 (traced, inside
+    shard_map): shard index along ``axis`` (row-major over axis tuples)
+    times the local camera count."""
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jnp.int32(mesh.shape[a]) + \
+            jax.lax.axis_index(a).astype(jnp.int32)
+    return idx * jnp.int32(c_local)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "kk"))
+def _fleet_pop_candidates(q_util, q_seq, rows, *, mesh, axis, kk):
+    """Per-shard top-kk candidates: (S*kk,) sort keys + global camera /
+    seq / slot ids, shard-local sort only (no collectives)."""
+
+    def local(util, seq, rowmask):
+        cl, K = util.shape
+        valid = (seq >= 0) & rowmask[:, None]
+        # canonicalize ±0.0 (u + 0.0) so the float total order used by
+        # lax.sort matches pop_best's IEEE == tiebreak on signed zeros
+        nu = jnp.where(valid, -(util + jnp.float32(0.0)),
+                       jnp.inf).reshape(-1)
+        off = _shard_offset(mesh, axis, cl)
+        cams = (jnp.broadcast_to(
+            jnp.arange(cl, dtype=jnp.int32)[:, None], (cl, K))
+            .reshape(-1) + off)
+        seqs = jnp.where(valid, seq,
+                         jnp.int32(2**31 - 1)).reshape(-1)
+        slots = jnp.broadcast_to(
+            jnp.arange(K, dtype=jnp.int32)[None, :], (cl, K)).reshape(-1)
+        nu_s, cam_s, seq_s, slot_s = jax.lax.sort(
+            (nu, cams, seqs, slots), num_keys=3)
+        return nu_s[:kk], cam_s[:kk], seq_s[:kk], slot_s[:kk]
+
+    return shard_map(
+        local, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        check_rep=False)(q_util, q_seq, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"),
+                   donate_argnames=("state",))
+def _fleet_pop_clear(state, gcam, slot, *, mesh, axis):
+    """Clear the popped (global camera, slot) entries shard-locally:
+    the (gcam, slot) lists are replicated; each shard scatters only the
+    rows it owns (out-of-range rows drop)."""
+    from repro.core.session import SessionState
+    st_spec = state_pspecs(SessionState, axis)
+
+    def local(st, gc, sl):
+        cl, K = st.q_util.shape
+        lc = gc - _shard_offset(mesh, axis, cl)
+        ok = (lc >= 0) & (lc < cl) & (sl >= 0)
+        ic = jnp.where(ok, lc, cl)          # OOB -> dropped scatter
+        isl = jnp.where(ok, sl, K)
+        q_util = st.q_util.at[ic, isl].set(-jnp.inf, mode="drop")
+        q_seq = st.q_seq.at[ic, isl].set(-1, mode="drop")
+        return dataclasses.replace(st, q_util=q_util, q_seq=q_seq)
+
+    return shard_map(
+        local, mesh=mesh, in_specs=(st_spec, P(), P()),
+        out_specs=st_spec, check_rep=False)(state, gcam, slot)
+
+
+def pop_topk(state, *, mesh, axis, k, rows=None):
+    """Pop the global best ``k`` queued frames from a camera-sharded
+    session — the exact frames (and order) ``pop_best`` would produce
+    sequentially. Returns ``(new_state, cams, seqs)`` with ``(k,)``
+    int32 outputs, -1 padded when the eligible queues drain.
+
+    ``rows``: optional global ``(C,)`` bool lane mask."""
+    C, K = state.q_util.shape
+    S = mesh_axis_size(mesh, axis)
+    k = int(k)
+    kk = min(k, (C // S) * K)
+    if rows is None:
+        rows = jnp.ones((C,), bool)
+    nu, gcam, seq, slot = _fleet_pop_candidates(
+        state.q_util, state.q_seq, rows, mesh=mesh, axis=axis, kk=kk)
+    nu, gcam = np.asarray(nu), np.asarray(gcam)
+    seq, slot = np.asarray(seq), np.asarray(slot)
+    fin = np.flatnonzero(nu < np.inf)
+    # exact global pop order: utility desc (nu asc; ±0 canonicalized on
+    # device), then camera asc, then seq asc — lexsort's IEEE compare
+    # agrees with the device total order on this key set
+    order = fin[np.lexsort((seq[fin], gcam[fin], nu[fin]))]
+    m = min(k, order.size)
+    sel = order[:m]
+    cams_out = np.full((k,), -1, np.int32)
+    seqs_out = np.full((k,), -1, np.int32)
+    cams_out[:m], seqs_out[:m] = gcam[sel], seq[sel]
+    gc = np.full((k,), C, np.int32)       # OOB pad -> dropped scatter
+    sl = np.full((k,), K, np.int32)
+    gc[:m], sl[:m] = gcam[sel], slot[sel]
+    new_state = _fleet_pop_clear(state, jnp.asarray(gc), jnp.asarray(sl),
+                                 mesh=mesh, axis=axis)
+    return new_state, cams_out, seqs_out
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "axis"))
@@ -300,23 +416,25 @@ def _fleet_aggregates(state, *, mesh, axis):
 # -- python-facing wrappers (keyword plumbing, mesh/axis hashability) -------
 
 def control_step(state, util, present=None, *, mesh, axis, num_total,
-                 update_cdf, do_tick, min_proc, budget, aggregate=False):
+                 update_cdf, do_tick, min_proc, budget, aggregate=False,
+                 tick_cfg=None):
     masked = present is not None
     if present is None:
         present = jnp.ones(util.shape, bool)
     return _fleet_control(
         state, util, present, mesh=mesh, axis=axis, num_total=num_total,
         masked=masked, update_cdf=update_cdf, do_tick=do_tick,
-        min_proc=min_proc, budget=budget, aggregate=aggregate)
+        min_proc=min_proc, budget=budget, aggregate=aggregate,
+        tick_cfg=tick_cfg)
 
 
 def serve_step(state, frames, M_pos, norm, **kw):
     return _fleet_serve_step(state, frames, M_pos, norm, **kw)
 
 
-def tick(state, *, mesh, axis, num_total, min_proc, budget):
+def tick(state, *, mesh, axis, num_total, min_proc, budget, tick_cfg=None):
     return _fleet_tick(state, mesh=mesh, axis=axis, num_total=num_total,
-                       min_proc=min_proc, budget=budget)
+                       min_proc=min_proc, budget=budget, tick_cfg=tick_cfg)
 
 
 def aggregates(state, *, mesh, axis, num_cameras: int) -> Dict[str, float]:
@@ -328,5 +446,6 @@ def aggregates(state, *, mesh, axis, num_cameras: int) -> Dict[str, float]:
 __all__ = [
     "CAMERA_AXIS", "aggregates", "camera_axis", "control_step",
     "derive_fleet_stats", "fleet_mesh", "gather_state", "mesh_axis_size",
-    "serve_step", "shard_state", "state_pspecs", "state_shardings", "tick",
+    "pop_topk", "serve_step", "shard_state", "state_pspecs",
+    "state_shardings", "tick",
 ]

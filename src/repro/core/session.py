@@ -61,7 +61,8 @@ import dataclasses
 import functools
 import heapq
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Dict, List, NamedTuple, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +73,10 @@ from repro.core.colors import COLORS, Color
 from repro.core.control import LatencyInputs
 from repro.core.shedder import ShedderStats
 from repro.core.threshold import (
+    bucket_index_dev,
+    bucket_index_host,
+    thresholds_from_counts_dev,
+    thresholds_from_counts_host,
     thresholds_from_lanes_dev,
     thresholds_from_lanes_host,
 )
@@ -99,6 +104,33 @@ SHED_CASCADE = 3     # passed the color gate, shed by the stage-2 scorer
 
 _DECISION_NAMES = {ADMIT: "queued", SHED_ADMISSION: "shed_admission",
                    SHED_QUEUE: "shed_queue", SHED_CASCADE: "shed_cascade"}
+
+
+class TickConfig(NamedTuple):
+    """Static quantile-tick configuration, threaded as ONE hashable
+    static through the serve-step programs.
+
+    ``exact=True`` re-derives Eq. 17 thresholds with the full ``(C, W)``
+    sort (``thresholds_from_lanes_*``) — bit-identical to the pre-bucket
+    behavior, the escape hatch. ``exact=False`` (the default) uses the
+    O(bins) cumsum over the incrementally-maintained ``(C, bins)`` count
+    histograms, whose threshold is within one bucket width above the
+    exact one for in-range utilities. The bucket geometry
+    (``lo``/``width``/``inv_width`` for the stage-1 utility range,
+    ``s2_*`` for the cascade scorer's softsign range) is baked in here;
+    counts are maintained either way, so flipping ``exact`` never
+    desyncs checkpointed state.
+    """
+    exact: bool = False
+    lo: float = 0.0
+    width: float = 1.0 / 256.0
+    inv_width: float = 256.0
+    s2_lo: float = -1.0
+    s2_width: float = 2.0 / 256.0
+    s2_inv_width: float = 128.0
+
+
+DEFAULT_TICK_CONFIG = TickConfig()
 
 
 def _as_color(c: Union[str, Color]) -> Color:
@@ -172,7 +204,9 @@ class SessionState:
         hold real history yet (frame 0 seeds them otherwise).
       * ``cdf_buf (C, W)`` ring buffers of recent utilities with
         ``cdf_len`` / ``cdf_pos`` — the sliding-window utility CDF
-        (Eq. 16) per camera.
+        (Eq. 16) per camera; ``cdf_counts (C, B)`` is its bucket-count
+        histogram, maintained incrementally with push/evict deltas so a
+        control tick is O(B) instead of a (C, W) sort (``TickConfig``).
       * ``threshold (C,)`` — current admission thresholds (Eq. 17).
       * ``proc_q (C,)`` (+ ``proc_seen``) — asymmetric-EWMA backend
         latency estimates; ``fps_obs (C,)`` (+ ``fps_seen``) — observed
@@ -190,6 +224,8 @@ class SessionState:
     cdf_buf: Any     # (C, W) float32
     cdf_len: Any     # (C,) int32
     cdf_pos: Any     # (C,) int32
+    cdf_counts: Any  # (C, B) int32 — live-window bucket histogram
+    #                  (always equals a recount of cdf_buf[:, :cdf_len])
     threshold: Any   # (C,) float32
     proc_q: Any      # (C,) float32
     proc_seen: Any   # (C,) bool
@@ -212,6 +248,7 @@ class SessionState:
     s2_len: Any        # (C,) int32
     s2_pos: Any        # (C,) int32
     s2_threshold: Any  # (C,) float32 stage-2 shed thresholds
+    s2_counts: Any     # (C, B) int32 stage-2 bucket histogram
 
     @property
     def num_cameras(self) -> int:
@@ -225,9 +262,11 @@ class SessionState:
     def fresh(cls, num_cameras: int, npix: int = 0, *,
               cdf_window: int = 4096, fps: float = 10.0,
               queue_size: int = 8, queue_capacity: int = 64,
-              s2_window: int = 64, xp=np) -> "SessionState":
+              s2_window: int = 64, quantile_bins: int = 256,
+              xp=np) -> "SessionState":
         C = int(num_cameras)
         K = max(int(queue_capacity), int(queue_size), 1)
+        B = int(quantile_bins)
         q_util, q_seq, q_next = sq.make_lanes(C, K, xp=xp)
         return cls(
             bg=xp.zeros((C, npix), xp.float32),
@@ -236,6 +275,7 @@ class SessionState:
             cdf_buf=xp.zeros((C, cdf_window), xp.float32),
             cdf_len=xp.zeros((C,), xp.int32),
             cdf_pos=xp.zeros((C,), xp.int32),
+            cdf_counts=xp.zeros((C, B), xp.int32),
             threshold=xp.full((C,), -xp.inf, xp.float32),
             proc_q=xp.zeros((C,), xp.float32),
             proc_seen=xp.zeros((C,), bool),
@@ -249,6 +289,7 @@ class SessionState:
             s2_len=xp.zeros((C,), xp.int32),
             s2_pos=xp.zeros((C,), xp.int32),
             s2_threshold=xp.full((C,), -xp.inf, xp.float32),
+            s2_counts=xp.zeros((C, B), xp.int32),
         )
 
 
@@ -287,44 +328,78 @@ class StepResult:
 # twins. Same float32 math, bit-identical outputs; see module docstring.
 # ---------------------------------------------------------------------------
 
-def _ring_push_dev(buf, pos, ln, us, mask):
+def _ring_push_dev(buf, pos, ln, counts, us, mask, lo: float,
+                   inv_width: float):
     """Append a (C, T) utility batch into the per-camera ring buffers;
-    ``mask`` marks real entries (None = all)."""
+    ``mask`` marks real entries (None = all). The (C, B) bucket
+    ``counts`` are maintained incrementally (ring-wrap aware: slot s is
+    pre-push live iff s < len, regardless of where ``pos`` wrapped), so
+    they always equal a recount of the live window."""
     C, W = buf.shape
+    B = counts.shape[1]
     rows = jnp.arange(C)[:, None]
     if mask is None:
         if us.shape[1] >= W:                   # only the tail can survive
             us = us[:, -W:]
         T = us.shape[1]
         idx = (pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]) % W
+        old = jnp.take_along_axis(buf, idx, axis=1)
+        evict = idx < ln[:, None]
         buf = buf.at[rows, idx].set(us)
+        counts = counts.at[rows, bucket_index_dev(us, lo, inv_width, B)].add(
+            jnp.int32(1))
         cnt = jnp.full((C,), T, jnp.int32)
     else:
         kk = jnp.cumsum(mask.astype(jnp.int32), axis=1)
         idx = jnp.where(mask, (pos[:, None] + kk - 1) % W, W)
+        old = jnp.take_along_axis(buf, jnp.minimum(idx, W - 1), axis=1)
+        evict = mask & (idx < ln[:, None])
         buf = buf.at[rows, idx].set(us, mode="drop")
+        counts = counts.at[rows, bucket_index_dev(us, lo, inv_width, B)].add(
+            mask.astype(jnp.int32))
         cnt = kk[:, -1]
+    counts = counts.at[rows, bucket_index_dev(old, lo, inv_width, B)].add(
+        -evict.astype(jnp.int32))
     pos = ((pos + cnt) % W).astype(jnp.int32)
     ln = jnp.minimum(ln + cnt, W).astype(jnp.int32)
-    return buf, pos, ln
+    return buf, pos, ln, counts
 
 
-def _ring_push_host(buf, pos, ln, us, mask):
-    """NumPy twin of :func:`_ring_push_dev`; mutates ``buf`` in place,
-    returns (pos', len')."""
+def _ring_push_host(buf, pos, ln, counts, us, mask, lo: float,
+                    inv_width: float):
+    """NumPy twin of :func:`_ring_push_dev`; mutates ``buf`` and
+    ``counts`` in place, returns (pos', len')."""
     C, W = buf.shape
+    B = counts.shape[1]
     if mask is None:
         if us.shape[1] >= W:
             us = us[:, -W:]
         T = us.shape[1]
         idx = (pos[:, None] + np.arange(T, dtype=np.int32)[None, :]) % W
-        buf[np.arange(C)[:, None], idx] = us
+        rows = np.arange(C)[:, None]
+        old = buf[rows, idx]                       # pre-write snapshot
+        evict = idx < ln[:, None]
+        rb = np.broadcast_to(rows, idx.shape)
+        np.add.at(counts, (rb[evict],
+                           bucket_index_host(old[evict], lo, inv_width, B)),
+                  -1)
+        np.add.at(counts, (rb.reshape(-1),
+                           bucket_index_host(us, lo, inv_width,
+                                             B).reshape(-1)), 1)
+        buf[rows, idx] = us
         cnt = np.full((C,), T, np.int32)
     else:
         kk = np.cumsum(mask.astype(np.int32), axis=1)
         idx = (pos[:, None] + kk - 1) % W
         r, t = np.nonzero(mask)
-        buf[r, idx[r, t]] = us[r, t]
+        ii = idx[r, t]
+        old = buf[r, ii]
+        ev = ii < ln[r]
+        np.add.at(counts, (r[ev],
+                           bucket_index_host(old[ev], lo, inv_width, B)), -1)
+        np.add.at(counts, (r, bucket_index_host(us[r, t], lo, inv_width, B)),
+                  1)
+        buf[r, ii] = us[r, t]
         cnt = kk[:, -1].astype(np.int32)
     pos = ((pos + cnt) % W).astype(np.int32)
     ln = np.minimum(ln + cnt, W).astype(np.int32)
@@ -332,15 +407,19 @@ def _ring_push_host(buf, pos, ln, us, mask):
 
 
 def _tick_core_dev(state: SessionState, min_proc: float, budget: float,
-                   num_total: Optional[int] = None):
+                   num_total: Optional[int] = None,
+                   tick_cfg: Optional[TickConfig] = None):
     """Eq. 18–20 re-derivation on device: target rates from the metric
-    lanes, thresholds via ONE batched (C, W) sort, queue caps + resize.
+    lanes, thresholds via the O(bins) bucket cumsum (or ONE batched
+    (C, W) sort under ``tick_cfg.exact``), queue caps + resize.
 
     ``num_total`` is the number of cameras sharing the backend — Eq. 19's
     service-time multiplier. It defaults to the local lane count; a
     camera-sharded fleet step (repro.core.fleet) passes the GLOBAL count
     so every shard derives the same rates as the unsharded program.
     """
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     C = num_total if num_total is not None else state.threshold.shape[0]
     p = jnp.maximum(state.proc_q, min_proc)
     # single-division form of Eq. 19's 1 - (ST/C)/fps: bit-stable under
@@ -353,7 +432,13 @@ def _tick_core_dev(state: SessionState, min_proc: float, budget: float,
     # Eq. 19 expression, so floor=0 / all-active stays bit-identical
     rates = jnp.maximum(rates, state.rate_floor).astype(jnp.float32)
     rates = jnp.where(state.active, rates, jnp.float32(0.0))
-    threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len, rates)
+    if tick_cfg.exact:
+        threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len,
+                                              rates)
+    else:
+        threshold = thresholds_from_counts_dev(
+            state.cdf_counts, state.cdf_len, rates, tick_cfg.lo,
+            tick_cfg.width)
     threshold = jnp.where(state.active, threshold, jnp.float32(jnp.inf))
     cap = jnp.maximum((budget / p + 1e-9).astype(jnp.int32) - 1, 1)
     q_util, q_seq, resize_ev = sq.resize_dev(state.q_util, state.q_seq, cap)
@@ -363,39 +448,80 @@ def _tick_core_dev(state: SessionState, min_proc: float, budget: float,
     return state, rates, resize_ev
 
 
+def _resize_host_guarded(state: SessionState, cap: np.ndarray, exact: bool,
+                         live: Optional[np.ndarray] = None) -> np.ndarray:
+    """Host-tick queue resize with a no-eviction fast path.
+
+    When no lane holds more live entries than its new (clipped) cap,
+    ``sq.resize_host`` would evict nothing and only renormalize the
+    physical lane layout — which nothing reads (entries are keyed by
+    seq; the next select renormalizes anyway) — so the (C, K) sort is
+    skipped and an all-(-1) event array returned. Gated off under
+    ``exact_tick`` so that escape hatch stays bit-identical to the
+    legacy tick, physical layout included.
+
+    ``live`` is an optional (C,) per-lane live-entry count (the
+    session passes its depth cache); recounted from ``q_seq`` when
+    absent.
+    """
+    K = state.q_seq.shape[1]
+    if not exact:
+        occ = live if live is not None else (state.q_seq >= 0).sum(axis=1)
+        if int((occ > np.clip(cap, 1, K)).sum()) == 0:
+            return np.full_like(state.q_seq, -1)
+    return sq.resize_host(state.q_util, state.q_seq, cap)
+
+
 def _tick_core_host(state: SessionState, min_proc: float, budget: float,
-                    num_total: Optional[int] = None):
-    """NumPy twin of :func:`_tick_core_dev`; mutates state in place."""
+                    num_total: Optional[int] = None,
+                    tick_cfg: Optional[TickConfig] = None,
+                    live: Optional[np.ndarray] = None):
+    """NumPy twin of :func:`_tick_core_dev`; mutates state in place.
+    ``live`` optionally feeds the session's (C,) depth cache to the
+    resize fast path (see :func:`_resize_host_guarded`)."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     C = num_total if num_total is not None else state.threshold.shape[0]
     p = np.maximum(state.proc_q, min_proc)
     rates = np.clip(
         1.0 - np.float32(1.0) / (p * C * np.maximum(state.fps_obs, 1e-9)),
-        0.0, 1.0).astype(np.float32)
-    rates = np.maximum(rates, state.rate_floor).astype(np.float32)
+        0.0, 1.0).astype(np.float32, copy=False)
+    rates = np.maximum(rates, state.rate_floor)
     rates = np.where(state.active, rates, np.float32(0.0))
-    threshold = thresholds_from_lanes_host(
-        state.cdf_buf, state.cdf_len, rates)
+    if tick_cfg.exact:
+        threshold = thresholds_from_lanes_host(
+            state.cdf_buf, state.cdf_len, rates)
+    else:
+        threshold = thresholds_from_counts_host(
+            state.cdf_counts, state.cdf_len, rates, tick_cfg.lo,
+            tick_cfg.width)
     state.threshold = np.where(state.active, threshold,
-                               np.float32(np.inf)).astype(np.float32)
+                               np.float32(np.inf)).astype(np.float32,
+                                                          copy=False)
     cap = np.maximum((budget / p + 1e-9).astype(np.int32) - 1, 1)
     state.queue_cap = cap.astype(np.int32)
-    resize_ev = sq.resize_host(state.q_util, state.q_seq, cap)
+    resize_ev = _resize_host_guarded(state, cap, tick_cfg.exact, live)
     return rates, resize_ev
 
 
 def _control_core_dev(state: SessionState, util, present, *,
                       update_cdf: bool, do_tick: bool,
                       min_proc: float, budget: float,
-                      num_total: Optional[int] = None):
+                      num_total: Optional[int] = None,
+                      tick_cfg: Optional[TickConfig] = None):
     """CDF push -> admission -> queue selection -> (optional) tick, all
     traced. Returns (state', outputs-dict of compact arrays)."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     util = util.astype(jnp.float32)
     C, T = util.shape
     rows = jnp.arange(C)[:, None]
     cdf_buf, cdf_pos, cdf_len = state.cdf_buf, state.cdf_pos, state.cdf_len
+    cdf_counts = state.cdf_counts
     if update_cdf:
-        cdf_buf, cdf_pos, cdf_len = _ring_push_dev(
-            cdf_buf, cdf_pos, cdf_len, util, present)
+        cdf_buf, cdf_pos, cdf_len, cdf_counts = _ring_push_dev(
+            cdf_buf, cdf_pos, cdf_len, cdf_counts, util, present,
+            tick_cfg.lo, tick_cfg.inv_width)
     shed = util < state.threshold[:, None]
     admit = ~shed if present is None else (present & ~shed)
     decisions = jnp.where(admit, ADMIT, SHED_ADMISSION).astype(jnp.int8)
@@ -411,7 +537,7 @@ def _control_core_dev(state: SessionState, util, present, *,
         jnp.where(flip, jnp.int8(SHED_QUEUE), jnp.int8(-1)))
     state = dataclasses.replace(
         state, cdf_buf=cdf_buf, cdf_pos=cdf_pos, cdf_len=cdf_len,
-        q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
+        cdf_counts=cdf_counts, q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
     out = {
         "decisions": decisions,
         "pushed_seq": pushed_seq,
@@ -422,7 +548,7 @@ def _control_core_dev(state: SessionState, util, present, *,
     }
     if do_tick:
         state, rates, resize_ev = _tick_core_dev(state, min_proc, budget,
-                                                 num_total)
+                                                 num_total, tick_cfg)
         out["rates"] = rates
         out["resize_evicted"] = resize_ev
     return state, out
@@ -431,13 +557,17 @@ def _control_core_dev(state: SessionState, util, present, *,
 def _control_core_host(state: SessionState, util, present, *,
                        update_cdf: bool, do_tick: bool,
                        min_proc: float, budget: float,
-                       num_total: Optional[int] = None):
+                       num_total: Optional[int] = None,
+                       tick_cfg: Optional[TickConfig] = None):
     """NumPy twin of :func:`_control_core_dev`; mutates state in place."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     util = np.asarray(util, np.float32)
     C, T = util.shape
     if update_cdf:
         state.cdf_pos, state.cdf_len = _ring_push_host(
-            state.cdf_buf, state.cdf_pos, state.cdf_len, util, present)
+            state.cdf_buf, state.cdf_pos, state.cdf_len, state.cdf_counts,
+            util, present, tick_cfg.lo, tick_cfg.inv_width)
     shed = util < state.threshold[:, None]
     admit = ~shed if present is None else (present & ~shed)
     decisions = np.where(admit, ADMIT, SHED_ADMISSION).astype(np.int8)
@@ -459,7 +589,7 @@ def _control_core_host(state: SessionState, util, present, *,
     }
     if do_tick:
         rates, resize_ev = _tick_core_host(state, min_proc, budget,
-                                           num_total)
+                                           num_total, tick_cfg)
         out["rates"] = rates
         out["resize_evicted"] = resize_ev
     return state, out
@@ -488,10 +618,15 @@ def _cascade_rates(rates, gate_fraction, xp):
 
 def _cascade_tick_core_dev(state: SessionState, min_proc: float,
                            budget: float, gate_fraction: float,
-                           num_total: Optional[int] = None):
+                           num_total: Optional[int] = None,
+                           tick_cfg: Optional[TickConfig] = None):
     """Two-threshold tick: the combined Eq. 18-20 rate (floor + churn
     mask applied first, as in ``_tick_core_dev``) is split across the
-    stages; each stage's threshold comes from ITS ring at ITS share."""
+    stages; each stage's threshold comes from ITS ring at ITS share —
+    both through the same O(bins) bucket machinery (the s2 geometry
+    covers the scorer's softsign range)."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     C = num_total if num_total is not None else state.threshold.shape[0]
     p = jnp.maximum(state.proc_q, min_proc)
     rates = jnp.clip(
@@ -500,9 +635,18 @@ def _cascade_tick_core_dev(state: SessionState, min_proc: float,
     rates = jnp.maximum(rates, state.rate_floor).astype(jnp.float32)
     rates = jnp.where(state.active, rates, jnp.float32(0.0))
     r1, r2 = _cascade_rates(rates, gate_fraction, jnp)
-    threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len, r1)
+    if tick_cfg.exact:
+        threshold = thresholds_from_lanes_dev(state.cdf_buf, state.cdf_len,
+                                              r1)
+        s2_threshold = thresholds_from_lanes_dev(state.s2_buf, state.s2_len,
+                                                 r2)
+    else:
+        threshold = thresholds_from_counts_dev(
+            state.cdf_counts, state.cdf_len, r1, tick_cfg.lo, tick_cfg.width)
+        s2_threshold = thresholds_from_counts_dev(
+            state.s2_counts, state.s2_len, r2, tick_cfg.s2_lo,
+            tick_cfg.s2_width)
     threshold = jnp.where(state.active, threshold, jnp.float32(jnp.inf))
-    s2_threshold = thresholds_from_lanes_dev(state.s2_buf, state.s2_len, r2)
     s2_threshold = jnp.where(state.active, s2_threshold,
                              jnp.float32(jnp.inf))
     cap = jnp.maximum((budget / p + 1e-9).astype(jnp.int32) - 1, 1)
@@ -515,8 +659,12 @@ def _cascade_tick_core_dev(state: SessionState, min_proc: float,
 
 def _cascade_tick_core_host(state: SessionState, min_proc: float,
                             budget: float, gate_fraction: float,
-                            num_total: Optional[int] = None):
+                            num_total: Optional[int] = None,
+                            tick_cfg: Optional[TickConfig] = None,
+                            live: Optional[np.ndarray] = None):
     """NumPy twin of :func:`_cascade_tick_core_dev` (in-place)."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     C = num_total if num_total is not None else state.threshold.shape[0]
     p = np.maximum(state.proc_q, min_proc)
     rates = np.clip(
@@ -525,55 +673,72 @@ def _cascade_tick_core_host(state: SessionState, min_proc: float,
     rates = np.maximum(rates, state.rate_floor).astype(np.float32)
     rates = np.where(state.active, rates, np.float32(0.0))
     r1, r2 = _cascade_rates(rates, gate_fraction, np)
-    threshold = thresholds_from_lanes_host(state.cdf_buf, state.cdf_len, r1)
+    if tick_cfg.exact:
+        threshold = thresholds_from_lanes_host(state.cdf_buf, state.cdf_len,
+                                               r1)
+        s2_th = thresholds_from_lanes_host(state.s2_buf, state.s2_len, r2)
+    else:
+        threshold = thresholds_from_counts_host(
+            state.cdf_counts, state.cdf_len, r1, tick_cfg.lo, tick_cfg.width)
+        s2_th = thresholds_from_counts_host(
+            state.s2_counts, state.s2_len, r2, tick_cfg.s2_lo,
+            tick_cfg.s2_width)
     state.threshold = np.where(state.active, threshold,
                                np.float32(np.inf)).astype(np.float32)
-    s2_th = thresholds_from_lanes_host(state.s2_buf, state.s2_len, r2)
     state.s2_threshold = np.where(state.active, s2_th,
                                   np.float32(np.inf)).astype(np.float32)
     cap = np.maximum((budget / p + 1e-9).astype(np.int32) - 1, 1)
     state.queue_cap = cap.astype(np.int32)
-    resize_ev = sq.resize_host(state.q_util, state.q_seq, cap)
+    resize_ev = _resize_host_guarded(state, cap, tick_cfg.exact, live)
     return rates, resize_ev
 
 
-@functools.partial(jax.jit, static_argnames=("update_cdf",),
+@functools.partial(jax.jit, static_argnames=("update_cdf", "tick_cfg"),
                    donate_argnames=("state",))
-def _cascade_admit_dev(state, util, present, *, update_cdf):
+def _cascade_admit_dev(state, util, present, *, update_cdf,
+                       tick_cfg=DEFAULT_TICK_CONFIG):
     """Cascade phase A on device: stage-1 CDF push + color gate.
     Returns (state', pass1 (C, T) bool — the frames the scorer sees)."""
     util = util.astype(jnp.float32)
     cdf_buf, cdf_pos, cdf_len = state.cdf_buf, state.cdf_pos, state.cdf_len
+    cdf_counts = state.cdf_counts
     if update_cdf:
-        cdf_buf, cdf_pos, cdf_len = _ring_push_dev(
-            cdf_buf, cdf_pos, cdf_len, util, present)
+        cdf_buf, cdf_pos, cdf_len, cdf_counts = _ring_push_dev(
+            cdf_buf, cdf_pos, cdf_len, cdf_counts, util, present,
+            tick_cfg.lo, tick_cfg.inv_width)
     pass1 = present & ~(util < state.threshold[:, None])
     state = dataclasses.replace(state, cdf_buf=cdf_buf, cdf_pos=cdf_pos,
-                                cdf_len=cdf_len)
+                                cdf_len=cdf_len, cdf_counts=cdf_counts)
     return state, pass1
 
 
-def _cascade_admit_host(state, util, present, *, update_cdf):
+def _cascade_admit_host(state, util, present, *, update_cdf,
+                        tick_cfg=DEFAULT_TICK_CONFIG):
     """NumPy twin of :func:`_cascade_admit_dev` (in-place)."""
     util = np.asarray(util, np.float32)
     if update_cdf:
         state.cdf_pos, state.cdf_len = _ring_push_host(
-            state.cdf_buf, state.cdf_pos, state.cdf_len, util, present)
+            state.cdf_buf, state.cdf_pos, state.cdf_len, state.cdf_counts,
+            util, present, tick_cfg.lo, tick_cfg.inv_width)
     return present & ~(util < state.threshold[:, None])
 
 
 def _cascade_finish_core_dev(state: SessionState, s2, present, pass1, *,
                              do_tick: bool, min_proc: float, budget: float,
                              gate_fraction: float,
-                             num_total: Optional[int] = None):
+                             num_total: Optional[int] = None,
+                             tick_cfg: Optional[TickConfig] = None):
     """Cascade phase B on device: stage-2 ring push (survivors only) ->
     stage-2 gate -> queue insertion keyed by the SEMANTIC score ->
     (optional) two-threshold tick."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     s2 = s2.astype(jnp.float32)
     C, T = s2.shape
     rows = jnp.arange(C)[:, None]
-    s2_buf, s2_pos, s2_len = _ring_push_dev(
-        state.s2_buf, state.s2_pos, state.s2_len, s2, pass1)
+    s2_buf, s2_pos, s2_len, s2_counts = _ring_push_dev(
+        state.s2_buf, state.s2_pos, state.s2_len, state.s2_counts, s2, pass1,
+        tick_cfg.s2_lo, tick_cfg.s2_inv_width)
     shed2 = pass1 & (s2 < state.s2_threshold[:, None])
     admit = pass1 & ~shed2
     decisions = jnp.where(
@@ -590,7 +755,7 @@ def _cascade_finish_core_dev(state: SessionState, s2, present, pass1, *,
         jnp.where(flip, jnp.int8(SHED_QUEUE), jnp.int8(-1)))
     state = dataclasses.replace(
         state, s2_buf=s2_buf, s2_pos=s2_pos, s2_len=s2_len,
-        q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
+        s2_counts=s2_counts, q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
     out = {
         "decisions": decisions,
         "pushed_seq": pushed_seq,
@@ -601,7 +766,7 @@ def _cascade_finish_core_dev(state: SessionState, s2, present, pass1, *,
     }
     if do_tick:
         state, rates, resize_ev = _cascade_tick_core_dev(
-            state, min_proc, budget, gate_fraction, num_total)
+            state, min_proc, budget, gate_fraction, num_total, tick_cfg)
         out["rates"] = rates
         out["resize_evicted"] = resize_ev
     return state, out
@@ -610,24 +775,30 @@ def _cascade_finish_core_dev(state: SessionState, s2, present, pass1, *,
 @functools.partial(
     jax.jit,
     static_argnames=("do_tick", "min_proc", "budget", "gate_fraction",
-                     "num_total"),
+                     "num_total", "tick_cfg"),
     donate_argnames=("state",))
 def _cascade_finish_dev(state, s2, present, pass1, *, do_tick, min_proc,
-                        budget, gate_fraction, num_total=None):
+                        budget, gate_fraction, num_total=None,
+                        tick_cfg=DEFAULT_TICK_CONFIG):
     return _cascade_finish_core_dev(
         state, s2, present, pass1, do_tick=do_tick, min_proc=min_proc,
-        budget=budget, gate_fraction=gate_fraction, num_total=num_total)
+        budget=budget, gate_fraction=gate_fraction, num_total=num_total,
+        tick_cfg=tick_cfg)
 
 
 def _cascade_finish_core_host(state: SessionState, s2, present, pass1, *,
                               do_tick: bool, min_proc: float, budget: float,
                               gate_fraction: float,
-                              num_total: Optional[int] = None):
+                              num_total: Optional[int] = None,
+                              tick_cfg: Optional[TickConfig] = None):
     """NumPy twin of :func:`_cascade_finish_core_dev` (in-place)."""
+    if tick_cfg is None:
+        tick_cfg = DEFAULT_TICK_CONFIG
     s2 = np.asarray(s2, np.float32)
     C, T = s2.shape
     state.s2_pos, state.s2_len = _ring_push_host(
-        state.s2_buf, state.s2_pos, state.s2_len, s2, pass1)
+        state.s2_buf, state.s2_pos, state.s2_len, state.s2_counts, s2, pass1,
+        tick_cfg.s2_lo, tick_cfg.s2_inv_width)
     shed2 = pass1 & (s2 < state.s2_threshold[:, None])
     admit = pass1 & ~shed2
     decisions = np.where(
@@ -650,7 +821,7 @@ def _cascade_finish_core_host(state: SessionState, s2, present, pass1, *,
     }
     if do_tick:
         rates, resize_ev = _cascade_tick_core_host(
-            state, min_proc, budget, gate_fraction, num_total)
+            state, min_proc, budget, gate_fraction, num_total, tick_cfg)
         out["rates"] = rates
         out["resize_evicted"] = resize_ev
     return state, out
@@ -658,36 +829,40 @@ def _cascade_finish_core_host(state: SessionState, s2, present, pass1, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("min_proc", "budget", "gate_fraction", "num_total"),
+    static_argnames=("min_proc", "budget", "gate_fraction", "num_total",
+                     "tick_cfg"),
     donate_argnames=("state",))
 def _cascade_tick_dev(state, *, min_proc, budget, gate_fraction,
-                      num_total=None):
+                      num_total=None, tick_cfg=DEFAULT_TICK_CONFIG):
     return _cascade_tick_core_dev(state, min_proc, budget, gate_fraction,
-                                  num_total)
+                                  num_total, tick_cfg)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("update_cdf", "do_tick", "min_proc", "budget",
-                     "num_total"),
+                     "num_total", "tick_cfg"),
     donate_argnames=("state",))
 def _control_step_dev(state, util, *, update_cdf, do_tick, min_proc, budget,
-                      num_total=None):
+                      num_total=None, tick_cfg=DEFAULT_TICK_CONFIG):
     return _control_core_dev(state, util, None, update_cdf=update_cdf,
                              do_tick=do_tick, min_proc=min_proc,
-                             budget=budget, num_total=num_total)
+                             budget=budget, num_total=num_total,
+                             tick_cfg=tick_cfg)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("update_cdf", "do_tick", "min_proc", "budget",
-                     "num_total"),
+                     "num_total", "tick_cfg"),
     donate_argnames=("state",))
 def _control_masked_dev(state, util, present, *, update_cdf, do_tick,
-                        min_proc, budget, num_total=None):
+                        min_proc, budget, num_total=None,
+                        tick_cfg=DEFAULT_TICK_CONFIG):
     return _control_core_dev(state, util, present, update_cdf=update_cdf,
                              do_tick=do_tick, min_proc=min_proc,
-                             budget=budget, num_total=num_total)
+                             budget=budget, num_total=num_total,
+                             tick_cfg=tick_cfg)
 
 
 @functools.partial(
@@ -695,12 +870,12 @@ def _control_masked_dev(state, util, present, *, update_cdf, do_tick,
     static_argnames=("hue_ranges", "bs", "bv", "alpha", "fg_threshold",
                      "use_fg", "bg_valid", "op", "impl", "interpret",
                      "update_cdf", "do_tick", "min_proc", "budget",
-                     "num_total"),
+                     "num_total", "tick_cfg"),
     donate_argnames=("state",))
 def _serve_step_dev(state, frames, M_pos, norm, *, hue_ranges, bs, bv,
                     alpha, fg_threshold, use_fg, bg_valid, op, impl,
                     interpret, update_cdf, do_tick, min_proc, budget,
-                    num_total=None):
+                    num_total=None, tick_cfg=DEFAULT_TICK_CONFIG):
     """The tentpole device program: fused ingest -> CDF push ->
     admission -> queue selection -> threshold/queue-size control, ONE
     jitted dispatch with the state pytree's buffers donated. Utilities
@@ -717,18 +892,29 @@ def _serve_step_dev(state, frames, M_pos, norm, *, hue_ranges, bs, bv,
                                 bg_valid=jnp.asarray(True))
     return _control_core_dev(state, util, None, update_cdf=update_cdf,
                              do_tick=do_tick, min_proc=min_proc,
-                             budget=budget, num_total=num_total)
+                             budget=budget, num_total=num_total,
+                             tick_cfg=tick_cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("update_cdf",),
+@functools.partial(jax.jit, static_argnames=("update_cdf", "tick_cfg"),
                    donate_argnames=("state",))
-def _offer_dev(state, cam, u, *, update_cdf):
+def _offer_dev(state, cam, u, *, update_cdf, tick_cfg=DEFAULT_TICK_CONFIG):
     """Single-frame admission on device: scalar CDF push + threshold
     compare + single queue push for one camera lane."""
     C, W = state.cdf_buf.shape
+    B = state.cdf_counts.shape[1]
     u = jnp.asarray(u, jnp.float32)
     cdf_buf, cdf_pos, cdf_len = state.cdf_buf, state.cdf_pos, state.cdf_len
+    cdf_counts = state.cdf_counts
     if update_cdf:
+        old = cdf_buf[cam, cdf_pos[cam]]
+        evict = cdf_pos[cam] < cdf_len[cam]
+        cdf_counts = cdf_counts.at[
+            cam, bucket_index_dev(old, tick_cfg.lo, tick_cfg.inv_width,
+                                  B)].add(-evict.astype(jnp.int32))
+        cdf_counts = cdf_counts.at[
+            cam, bucket_index_dev(u, tick_cfg.lo, tick_cfg.inv_width,
+                                  B)].add(1)
         cdf_buf = cdf_buf.at[cam, cdf_pos[cam]].set(u)
         cdf_pos = cdf_pos.at[cam].set((cdf_pos[cam] + 1) % W)
         cdf_len = cdf_len.at[cam].set(jnp.minimum(cdf_len[cam] + 1, W))
@@ -742,7 +928,7 @@ def _offer_dev(state, cam, u, *, update_cdf):
                                jnp.int8(ADMIT)))
     state = dataclasses.replace(
         state, cdf_buf=cdf_buf, cdf_pos=cdf_pos, cdf_len=cdf_len,
-        q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
+        cdf_counts=cdf_counts, q_util=q_util, q_seq=q_seq, q_next_seq=q_next)
     return state, code, pushed_seq[cam], evicted_seq[cam]
 
 
@@ -758,11 +944,30 @@ def _pop_cam_dev(state, cam):
     return dataclasses.replace(state, q_util=q_util, q_seq=q_seq), cam, seq
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("min_proc", "budget", "num_total"),
+@functools.partial(jax.jit, static_argnames=("k",),
                    donate_argnames=("state",))
-def _tick_dev(state, *, min_proc, budget, num_total=None):
-    return _tick_core_dev(state, min_proc, budget, num_total)
+def _pop_topk_dev(state, *, k):
+    q_util, q_seq, cams, seqs = sq.pop_topk_dev(state.q_util, state.q_seq, k)
+    return (dataclasses.replace(state, q_util=q_util, q_seq=q_seq),
+            cams, seqs)
+
+
+@functools.partial(jax.jit, static_argnames=("k",),
+                   donate_argnames=("state",))
+def _pop_topk_masked_dev(state, rows, *, k):
+    q_util, q_seq, cams, seqs = sq.pop_topk_dev(state.q_util, state.q_seq, k,
+                                                rows)
+    return (dataclasses.replace(state, q_util=q_util, q_seq=q_seq),
+            cams, seqs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("min_proc", "budget", "num_total",
+                                    "tick_cfg"),
+                   donate_argnames=("state",))
+def _tick_dev(state, *, min_proc, budget, num_total=None,
+              tick_cfg=DEFAULT_TICK_CONFIG):
+    return _tick_core_dev(state, min_proc, budget, num_total, tick_cfg)
 
 
 class ShedSession:
@@ -789,7 +994,12 @@ class ShedSession:
                  mesh: Optional[Any] = None,
                  shard_cameras: Optional[bool] = None,
                  fleet_aggregate: bool = False,
-                 cascade: Optional[Any] = None) -> None:
+                 cascade: Optional[Any] = None,
+                 exact_tick: bool = False,
+                 quantile_bins: int = 256,
+                 quantile_range: Tuple[float, float] = (0.0, 1.0),
+                 s2_quantile_range: Tuple[float, float] = (-1.0, 1.0),
+                 ) -> None:
         if num_cameras < 1:
             raise ValueError("num_cameras must be >= 1")
         self.query = query
@@ -841,11 +1051,30 @@ class ShedSession:
         self.serve = serve
         self._xp = jnp if serve == "device" else np
         self._queue_size = int(queue_size)
+        # quantile-tick mode: O(bins) incremental bucket counts by
+        # default, exact (C, W) sort behind exact_tick=True. One
+        # hashable static (TickConfig) carries the bucket geometry
+        # through every jitted program.
+        bins = int(quantile_bins)
+        if bins < 2:
+            raise ValueError(f"quantile_bins {bins} must be >= 2")
+        qlo, qhi = (float(quantile_range[0]), float(quantile_range[1]))
+        s2lo, s2hi = (float(s2_quantile_range[0]),
+                      float(s2_quantile_range[1]))
+        if not (qhi > qlo and s2hi > s2lo):
+            raise ValueError("quantile ranges must satisfy hi > lo")
+        self.exact_tick = bool(exact_tick)
+        self.quantile_bins = bins
+        self._tick_cfg = TickConfig(
+            exact=self.exact_tick,
+            lo=qlo, width=(qhi - qlo) / bins, inv_width=bins / (qhi - qlo),
+            s2_lo=s2lo, s2_width=(s2hi - s2lo) / bins,
+            s2_inv_width=bins / (s2hi - s2lo))
         npix = frame_shape[0] * frame_shape[1] if frame_shape else 0
         self.state = SessionState.fresh(
             num_cameras, npix, cdf_window=cdf_window, fps=query.fps,
             queue_size=queue_size, queue_capacity=queue_capacity,
-            s2_window=s2_window, xp=self._xp)
+            s2_window=s2_window, quantile_bins=bins, xp=self._xp)
         if self.mesh is not None:
             from repro.core import fleet as _fleet
             self._shardings = _fleet.state_shardings(
@@ -855,6 +1084,10 @@ class ShedSession:
         self.queue_capacity = int(self.state.q_util.shape[1])
         self._payloads: List[Dict[int, Any]] = [
             {} for _ in range(self.num_cameras)]
+        # live queue depths, maintained incrementally from the compact
+        # step/offer/pop outputs so __len__/queue_depths never transfer
+        # the (C, K) q_seq lanes to host on the sender loop
+        self._depths = np.zeros((self.num_cameras,), np.int64)
         self.stats = ShedderStats()
         self.per_camera_offered = np.zeros((self.num_cameras,), np.int64)
         self.per_camera_dropped = np.zeros((self.num_cameras,), np.int64)
@@ -918,6 +1151,7 @@ class ShedSession:
         self._payloads[lane] = {}
         self.stats.dropped_queue += len(drained)
         self.per_camera_dropped[lane] += len(drained)
+        self._depths[lane] = 0
         self._reset_lane(lane, active=False)
         heapq.heappush(self._free_lanes, lane)
         self._active_host[lane] = False
@@ -943,8 +1177,10 @@ class ShedSession:
         -inf (admit everything) until their CDF window fills."""
         q = self.query
         K = self.queue_capacity
+        B = int(self.state.cdf_counts.shape[1])
         for name, v in (
                 ("gain", 1.0), ("cdf_len", 0), ("cdf_pos", 0),
+                ("cdf_counts", np.zeros((B,), np.int32)),
                 ("threshold", np.float32(-np.inf if active else np.inf)),
                 ("proc_q", 0.0), ("proc_seen", False),
                 ("fps_obs", float(q.fps)), ("fps_seen", False),
@@ -955,8 +1191,10 @@ class ShedSession:
                 ("s2_len", 0), ("s2_pos", 0),
                 ("s2_threshold",
                  np.float32(-np.inf if active else np.inf)),
+                ("s2_counts", np.zeros((B,), np.int32)),
                 ("active", bool(active))):
             self._write_lane(name, lane, v)
+        self._depths[lane] = 0
         if self.state.bg.shape[1]:
             self._write_lane(
                 "bg", lane,
@@ -1015,13 +1253,17 @@ class ShedSession:
         us = np.asarray(utilities, np.float32).reshape(-1)
         us = np.broadcast_to(us, (self.num_cameras, us.size))
         st = self.state
+        cfg = self._tick_cfg
         if self.serve == "device":
-            buf, pos, ln = _ring_push_dev(
-                st.cdf_buf, st.cdf_pos, st.cdf_len, jnp.asarray(us), None)
+            buf, pos, ln, counts = _ring_push_dev(
+                st.cdf_buf, st.cdf_pos, st.cdf_len, st.cdf_counts,
+                jnp.asarray(us), None, cfg.lo, cfg.inv_width)
             st.cdf_buf, st.cdf_pos, st.cdf_len = buf, pos, ln
+            st.cdf_counts = counts
         else:
             st.cdf_pos, st.cdf_len = _ring_push_host(
-                st.cdf_buf, st.cdf_pos, st.cdf_len, us, None)
+                st.cdf_buf, st.cdf_pos, st.cdf_len, st.cdf_counts, us, None,
+                cfg.lo, cfg.inv_width)
 
     # -- fused ingest --------------------------------------------------------
 
@@ -1142,7 +1384,7 @@ class ShedSession:
                                       items, tick, impl, interpret)
         kw = dict(update_cdf=self.update_cdf_online, do_tick=bool(tick),
                   min_proc=self.min_proc, budget=self._budget,
-                  num_total=self._num_active)
+                  num_total=self._num_active, tick_cfg=self._tick_cfg)
         if frames is not None:
             if self.model is None:
                 raise ValueError("step(frames=...) needs a trained model "
@@ -1215,7 +1457,7 @@ class ShedSession:
         foreground bbox rider supplying the scorer's ROIs for free."""
         kwt = dict(do_tick=bool(tick), min_proc=self.min_proc,
                    budget=self._budget, gate_fraction=self._gate_fraction,
-                   num_total=self._num_active)
+                   num_total=self._num_active, tick_cfg=self._tick_cfg)
         bbox = None
         if frames is not None:
             if self.model is None:
@@ -1257,12 +1499,12 @@ class ShedSession:
         if self.serve == "device":
             self.state, pass1 = _cascade_admit_dev(
                 self.state, jnp.asarray(util), jnp.asarray(present),
-                update_cdf=self.update_cdf_online)
+                update_cdf=self.update_cdf_online, tick_cfg=self._tick_cfg)
             pass1 = np.asarray(pass1)
         else:
             pass1 = _cascade_admit_host(
                 self.state, util, present,
-                update_cdf=self.update_cdf_online)
+                update_cdf=self.update_cdf_online, tick_cfg=self._tick_cfg)
         # stage-2 scoring — ONE batched scorer call over the survivors
         if s2_utilities is not None:
             s2 = np.asarray(s2_utilities, np.float32).reshape(util.shape)
@@ -1304,6 +1546,9 @@ class ShedSession:
         self.per_camera_offered += offered.sum(axis=1)
         res_cnt = (ev_res >= 0).sum(axis=1)
         self.per_camera_dropped += (decisions > ADMIT).sum(axis=1) + res_cnt
+        # net queue-depth change: frames that survived the batch as
+        # ADMIT minus evicted residents (resize evictions below)
+        self._depths += (decisions == ADMIT).sum(axis=1) - res_cnt
         evicted: List[np.ndarray] = []
         for c in range(C):
             pl = self._payloads[c]
@@ -1321,13 +1566,14 @@ class ShedSession:
             cnt = (rz >= 0).sum(axis=1)
             self.stats.dropped_queue += int(cnt.sum())
             self.per_camera_dropped += cnt
-            for c in range(C):
+            self._depths -= cnt
+            for c in np.flatnonzero(cnt):
                 evs = rz[c][rz[c] >= 0]
+                pl = self._payloads[c]
                 for s in evs:
-                    self._payloads[c].pop(int(s), None)
-                if evs.size:
-                    evicted[c] = np.concatenate(
-                        [evicted[c], evs.astype(np.int64)])
+                    pl.pop(int(s), None)
+                evicted[c] = np.concatenate(
+                    [evicted[c], evs.astype(np.int64)])
         return StepResult(decisions=decisions, pushed_seq=pushed_seq,
                           evicted=evicted, target_drop_rate=rates,
                           s2_scores=s2_scores)
@@ -1394,12 +1640,20 @@ class ShedSession:
         st = self.state
         if self.serve == "device":
             self.state, code, pushed, evicted = _offer_dev(
-                st, c, u, update_cdf=self.update_cdf_online)
+                st, c, u, update_cdf=self.update_cdf_online,
+                tick_cfg=self._tick_cfg)
             code, pushed, evicted = int(code), int(pushed), int(evicted)
         else:
             if self.update_cdf_online:
+                cfg = self._tick_cfg
                 W = st.cdf_buf.shape[1]
+                B = st.cdf_counts.shape[1]
                 p = int(st.cdf_pos[c])
+                if p < int(st.cdf_len[c]):     # overwriting a live slot
+                    st.cdf_counts[c, int(bucket_index_host(
+                        st.cdf_buf[c, p], cfg.lo, cfg.inv_width, B))] -= 1
+                st.cdf_counts[c, int(bucket_index_host(
+                    u, cfg.lo, cfg.inv_width, B))] += 1
                 st.cdf_buf[c, p] = u
                 st.cdf_pos[c] = (p + 1) % W
                 st.cdf_len[c] = min(int(st.cdf_len[c]) + 1, W)
@@ -1425,6 +1679,8 @@ class ShedSession:
         self._payloads[c][pushed] = item
         if evicted >= 0:
             self._payloads[c].pop(evicted, None)
+        else:
+            self._depths[c] += 1        # push without eviction: net +1
         return "queued"
 
     def offer_batch(self, items: Sequence[Any],
@@ -1461,7 +1717,7 @@ class ShedSession:
                 slot_of[(c, t)] = i
         kw = dict(update_cdf=self.update_cdf_online, do_tick=False,
                   min_proc=self.min_proc, budget=self._budget,
-                  num_total=self._num_active)
+                  num_total=self._num_active, tick_cfg=self._tick_cfg)
         if self.serve == "device":
             if self.mesh is not None:
                 from repro.core import fleet as _fleet
@@ -1496,17 +1752,59 @@ class ShedSession:
             c, seqv = sq.pop_best_host(st.q_util, st.q_seq, cam)
         if seqv < 0:
             return None
+        self._depths[c] -= 1
         item = self._payloads[c].pop(seqv, (c, seqv))
         self.stats.sent += 1
         return item
 
+    def next_frames(self, k: int,
+                    cams: Optional[Sequence[int]] = None) -> List[Any]:
+        """Batched transmission control: pop the ``k`` best queued
+        frames in ONE top-k dispatch — the exact frames (and order) a
+        loop of ``next_frame()`` calls would send, without a host sync
+        per frame. ``cams`` restricts the pool to those camera lanes
+        (default: the whole array). Returns up to ``k`` payloads; fewer
+        when the eligible queues drain first."""
+        if k <= 0:
+            return []
+        rows = None
+        if cams is not None:
+            rows = np.zeros((self.num_cameras,), bool)
+            rows[[int(c) for c in cams]] = True
+        st = self.state
+        if self.serve == "device":
+            if self.mesh is not None:
+                from repro.core import fleet as _fleet
+                self.state, pc, ps = _fleet.pop_topk(
+                    st, mesh=self.mesh, axis=self._cam_axis, k=int(k),
+                    rows=None if rows is None else jnp.asarray(rows))
+            elif rows is None:
+                self.state, pc, ps = _pop_topk_dev(st, k=int(k))
+            else:
+                self.state, pc, ps = _pop_topk_masked_dev(
+                    st, jnp.asarray(rows), k=int(k))
+            pc, ps = np.asarray(pc), np.asarray(ps)
+        else:
+            pc, ps = sq.pop_topk_host(st.q_util, st.q_seq, int(k),
+                                      rows=rows)
+        items: List[Any] = []
+        for c, s in zip(pc.tolist(), ps.tolist()):
+            if s < 0:               # -1 padding: pool drained
+                break
+            self._depths[c] -= 1
+            items.append(self._payloads[c].pop(s, (c, s)))
+        self.stats.sent += len(items)
+        return items
+
     def __len__(self) -> int:
-        return int((np.asarray(self.state.q_seq) >= 0).sum())
+        return int(self._depths.sum())
 
     def queue_depths(self) -> np.ndarray:
         """Live per-camera send-queue depths, ``(C,)`` ints — the
-        serving layer's queue-depth observability hook."""
-        return (np.asarray(self.state.q_seq) >= 0).sum(axis=1)
+        serving layer's queue-depth observability hook (a host-side
+        counter maintained by every push/pop/resize, so reading it
+        never transfers the ``(C, K)`` queue lanes off-device)."""
+        return self._depths.copy()
 
     def observed_drop_rate(self, cam: int = 0) -> float:
         """Fraction of camera ``cam``'s history below its threshold."""
@@ -1579,34 +1877,40 @@ class ShedSession:
                     self.state, min_proc=self.min_proc,
                     budget=self._budget,
                     gate_fraction=self._gate_fraction,
-                    num_total=self._num_active)
+                    num_total=self._num_active,
+                    tick_cfg=self._tick_cfg)
                 rates, resize_ev = np.asarray(rates), np.asarray(resize_ev)
             else:
                 rates, resize_ev = _cascade_tick_core_host(
                     self.state, self.min_proc, self._budget,
-                    self._gate_fraction, num_total=self._num_active)
+                    self._gate_fraction, num_total=self._num_active,
+                    tick_cfg=self._tick_cfg, live=self._depths)
         elif self.serve == "device":
             if self.mesh is not None:
                 from repro.core import fleet as _fleet
                 self.state, rates, resize_ev = _fleet.tick(
                     self.state, mesh=self.mesh, axis=self._cam_axis,
                     num_total=self._num_active, min_proc=self.min_proc,
-                    budget=self._budget)
+                    budget=self._budget, tick_cfg=self._tick_cfg)
             else:
                 self.state, rates, resize_ev = _tick_dev(
                     self.state, min_proc=self.min_proc, budget=self._budget,
-                    num_total=self._num_active)
+                    num_total=self._num_active, tick_cfg=self._tick_cfg)
             rates, resize_ev = np.asarray(rates), np.asarray(resize_ev)
         else:
             rates, resize_ev = _tick_core_host(
                 self.state, self.min_proc, self._budget,
-                num_total=self._num_active)
+                num_total=self._num_active, tick_cfg=self._tick_cfg,
+                live=self._depths)
         cnt = (resize_ev >= 0).sum(axis=1)
         self.stats.dropped_queue += int(cnt.sum())
         self.per_camera_dropped += cnt
-        for c in range(self.num_cameras):
-            for s in resize_ev[c][resize_ev[c] >= 0]:
-                self._payloads[c].pop(int(s), None)
+        self._depths -= cnt
+        # one flat pass over the eviction events instead of a nested
+        # per-camera Python loop (resize_ev is (C, K), -1 padded)
+        ev_c, ev_k = np.nonzero(resize_ev >= 0)
+        for c, s in zip(ev_c.tolist(), resize_ev[ev_c, ev_k].tolist()):
+            self._payloads[c].pop(int(s), None)
         st = self.state
         threshold = np.asarray(st.threshold)
         # report the EFFECTIVE queue sizes: Eq. 20's cap clipped to the
@@ -1725,6 +2029,8 @@ class ShedSession:
             heapq.heapify(self._free_lanes)
         self._active_host = np.asarray(self.state.active, bool).copy()
         self._num_active = int(self._active_host.sum())
+        self._depths = (np.asarray(self.state.q_seq) >= 0).sum(
+            axis=1).astype(np.int64)
         floors = np.asarray(self.state.rate_floor)
         self._rate_floor_host = float(floors.max()) if floors.size else 0.0
         return step, meta

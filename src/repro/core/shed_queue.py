@@ -396,6 +396,108 @@ def peek_best_host(util, seq):
     return bu, has
 
 
+# ---------------------------------------------------------------------------
+# Batched top-k pop (device-side transmission control)
+# ---------------------------------------------------------------------------
+#
+# k sequential pop_best(cam=None) calls emit entries in the strict
+# lexicographic order (utility desc, camera asc, seq asc) — a total
+# order, since (cam, seq) is unique among live entries. One sort over
+# the flattened (C*K,) lanes therefore reproduces the whole sequence:
+# on device a single variadic ``lax.sort`` with keys (-util, cam, seq)
+# IS the top-k selection (``lax.top_k`` itself lowers to this sort, and
+# with x64 disabled no single 32-bit key can carry the two-level
+# tiebreak); on host an ``np.argpartition`` candidate pool + boundary
+# tie fix-up does the same in O(C*K + k log k). Utilities are
+# canonicalized with ``u + 0.0`` (folds -0.0 into +0.0, exact for every
+# other float) so ±0 ties break by (cam, seq) exactly like the scalar
+# pop's ``==`` mask; float negation is exact and order-reversing for
+# the remaining values, so dev and host agree bit-for-bit.
+
+def pop_topk_dev(util, seq, k: int, rows=None):
+    """Pop the ``min(k, C*K)`` best entries of the (C, K) lanes in ONE
+    device dispatch — exactly the sequence ``k`` sequential
+    :func:`pop_best_dev` (cam=None) calls would pop.
+
+    rows: optional (C,) bool mask restricting candidate cameras.
+    Returns (util', seq', cams, seqs): popped identities padded with -1
+    past the number of live entries (found entries form a prefix).
+    """
+    C, K = util.shape
+    kk = min(int(k), C * K)
+    valid = seq >= 0
+    if rows is not None:
+        valid = valid & rows[:, None]
+    nu = jnp.where(valid, -(util + jnp.float32(0.0)),
+                   jnp.inf).reshape(-1)
+    cams = jnp.broadcast_to(
+        jnp.arange(C, dtype=jnp.int32)[:, None], (C, K)).reshape(-1)
+    seqs = jnp.where(valid, seq, INT32_MAX).reshape(-1)
+    slots = jnp.broadcast_to(
+        jnp.arange(K, dtype=jnp.int32)[None, :], (C, K)).reshape(-1)
+    nu_s, cam_s, seq_s, slot_s = jax.lax.sort(
+        (nu, cams, seqs, slots), num_keys=3)
+    found = nu_s[:kk] < jnp.inf          # live utilities are finite
+    pc = jnp.where(found, cam_s[:kk], -1).astype(jnp.int32)
+    ps = jnp.where(found, seq_s[:kk], -1).astype(jnp.int32)
+    ic = jnp.where(found, cam_s[:kk], C)           # OOB row -> dropped
+    new_util = util.at[ic, slot_s[:kk]].set(-jnp.inf, mode="drop")
+    new_seq = seq.at[ic, slot_s[:kk]].set(-1, mode="drop")
+    return new_util, new_seq, pc, ps
+
+
+def _topk_key_host(util, valid):
+    """uint32 key ascending in (utility desc) — the order-preserving
+    float32 bit map of :func:`_order_key_host`, complemented. Invalid
+    entries map to the maximal key (sorts last, like +inf on device)."""
+    u0 = np.asarray(util, np.float32) + np.float32(0.0)   # -0.0 -> +0.0
+    ub = np.ascontiguousarray(u0).view(np.uint32)
+    fkey = np.where(ub >> 31 == 1, ~ub, ub | np.uint32(0x80000000))
+    return np.where(valid, ~fkey, np.uint32(0xFFFFFFFF))
+
+
+def pop_topk_host(util, seq, k: int, rows=None):
+    """NumPy twin of :func:`pop_topk_dev`; mutates the lanes in place,
+    returns (cams, seqs) int32 arrays of length ``min(k, C*K)`` padded
+    with -1 (popped identities in pop order, live entries first)."""
+    C, K = util.shape
+    kk = min(int(k), C * K)
+    valid = seq >= 0
+    if rows is not None:
+        valid = valid & np.asarray(rows, bool)[:, None]
+    cams_out = np.full((kk,), -1, np.int32)
+    seqs_out = np.full((kk,), -1, np.int32)
+    m = min(kk, int(valid.sum()))
+    if m == 0:
+        return cams_out, seqs_out
+    dk = _topk_key_host(util, valid).reshape(-1)
+    sflat = seq.reshape(-1)
+    if m < dk.size:
+        part = np.argpartition(dk, m - 1)
+        thresh = dk[part[m - 1]]               # the m-th smallest key
+        strict = np.flatnonzero(dk < thresh)   # at most m-1 entries
+        ties = np.flatnonzero(dk == thresh)
+        need = m - strict.size
+        if need < ties.size:                   # boundary tie fix-up:
+            tc = (ties // K).astype(np.int32)  # oldest (cam, seq) wins
+            sel = ties[np.lexsort((sflat[ties], tc))[:need]]
+        else:
+            sel = ties
+        idx = np.concatenate([strict, sel])
+    else:
+        idx = np.flatnonzero(valid.reshape(-1))
+    c_i = (idx // K).astype(np.int32)
+    s_i = sflat[idx]
+    order = np.lexsort((s_i, c_i, dk[idx]))    # final exact pop order
+    c_i, s_i, idx = c_i[order], s_i[order], idx[order]
+    sl = (idx % K).astype(np.int32)
+    util[c_i, sl] = -np.inf
+    seq[c_i, sl] = -1
+    cams_out[:m] = c_i
+    seqs_out[:m] = s_i
+    return cams_out, seqs_out
+
+
 __all__ = [
     "UtilityQueue", "make_lanes",
     "select_dev", "select_host",
@@ -403,4 +505,5 @@ __all__ = [
     "push_one_dev", "push_one_host",
     "resize_dev", "resize_host",
     "pop_best_dev", "pop_best_host", "peek_best_host",
+    "pop_topk_dev", "pop_topk_host",
 ]

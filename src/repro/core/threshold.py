@@ -21,14 +21,47 @@ Three forms of the same Eq. 17:
     this can differ from the scalar float64 path by one rank only when
     ``r * n`` rounds across an integer in float32 — astronomically rare
     and bounded by one sample.
+
+``thresholds_from_counts_dev`` / ``thresholds_from_counts_host``
+    The O(bins) form on an incrementally-maintained ``(C, bins)``
+    bucket-count histogram of the same window (the session carries the
+    counts as checkpointed state and updates them with push/evict
+    deltas inside the serve step). A tick is then one ``(C, bins)``
+    cumsum + rank compare instead of a ``(C, W)`` sort. The returned
+    threshold is the *upper edge* of the bucket holding the rank-k
+    order statistic, so it always satisfies ``th >= exact_nextafter_th``
+    (never sheds less than Eq. 17 asks) and, for utilities inside the
+    configured ``[lo, hi)`` range, drifts by at most one bucket width.
+    Out-of-range utilities clip into the edge buckets and only coarsen
+    resolution there. Dev/host twins are bit-identical (same float32
+    binning arithmetic, exact int32 counting).
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Iterable, Optional
 
 import jax.numpy as jnp
 import numpy as np
+
+# Per-thread scratch for the O(bins) host tick: the (C, bins) cumsum
+# and rank-compare outputs are written into reused buffers (keyed by
+# shape) instead of fresh allocations — this is the serving hot path,
+# called every control tick. Thread-local so concurrent sessions in
+# different threads never share a buffer.
+_tick_scratch = threading.local()
+
+
+def _scratch(shape, dtype) -> np.ndarray:
+    cache = getattr(_tick_scratch, "bufs", None)
+    if cache is None:
+        cache = _tick_scratch.bufs = {}
+    key = (shape, np.dtype(dtype).str)
+    buf = cache.get(key)
+    if buf is None:
+        buf = cache[key] = np.empty(shape, dtype)
+    return buf
 
 
 def threshold_from_sorted(v: np.ndarray, r: float) -> float:
@@ -91,6 +124,77 @@ def thresholds_from_lanes_host(cdf_buf: np.ndarray, cdf_len: np.ndarray,
     return th
 
 
+def bucket_index_dev(u, lo: float, inv_width: float, bins: int):
+    """Map utilities to bucket indices: ``clip(floor((u - lo) * B/(hi-lo)),
+    0, B-1)``. Float32 arithmetic so the host twin is bit-identical."""
+    b = jnp.floor((u - jnp.float32(lo)) * jnp.float32(inv_width))
+    return jnp.clip(b.astype(jnp.int32), 0, bins - 1)
+
+
+def bucket_index_host(u, lo: float, inv_width: float, bins: int):
+    """NumPy twin of :func:`bucket_index_dev` (same f32 ops bit-for-bit)."""
+    b = np.floor((np.asarray(u, np.float32) - np.float32(lo))
+                 * np.float32(inv_width))
+    return np.clip(b.astype(np.int32), 0, bins - 1)
+
+
+def counts_from_ring_host(buf: np.ndarray, ln: np.ndarray, lo: float,
+                          inv_width: float, bins: int) -> np.ndarray:
+    """Recount a ``(C, W)`` ring's live entries (slots ``[0, len)``) into
+    ``(C, bins)`` int32 bucket counts — the ground truth the session's
+    incremental maintenance must always equal (property-tested)."""
+    C, _ = buf.shape
+    counts = np.zeros((C, bins), np.int32)
+    for c in range(C):
+        n = int(ln[c])
+        if n:
+            np.add.at(counts[c], bucket_index_host(buf[c, :n], lo,
+                                                   inv_width, bins), 1)
+    return counts
+
+
+def thresholds_from_counts_dev(counts, cdf_len, rates, lo: float,
+                               width: float):
+    """O(bins) Eq. 17 over incremental bucket counts — no (C, W) sort.
+
+    counts: (C, bins) int32 live-entry histogram of the CDF window.
+    cdf_len: (C,) int32 live window lengths (== counts.sum(-1)).
+    rates: (C,) float32 target drop rates. Returns (C,) float32
+    thresholds: the upper edge of the bucket containing the rank-k
+    order statistic, where k is exactly the Eq. 17 float32 rank
+    (``clip(ceil(min(r,1) * f32(n)), 1, n)`` — the same index the sort
+    path gathers). -inf for empty windows or r <= 0.
+    """
+    C, B = counts.shape
+    n = cdf_len.astype(jnp.int32)
+    r = jnp.asarray(rates, jnp.float32)
+    k = jnp.ceil(jnp.minimum(r, 1.0) * n.astype(jnp.float32)).astype(jnp.int32)
+    k = jnp.clip(k, 1, jnp.maximum(n, 1))
+    cum = jnp.cumsum(counts, axis=-1)
+    b = jnp.minimum((cum < k[:, None]).sum(axis=-1).astype(jnp.int32), B - 1)
+    th = jnp.float32(lo) + (b + 1).astype(jnp.float32) * jnp.float32(width)
+    return jnp.where((n == 0) | (r <= 0.0), -jnp.inf, th).astype(jnp.float32)
+
+
+def thresholds_from_counts_host(counts: np.ndarray, cdf_len: np.ndarray,
+                                rates: np.ndarray, lo: float,
+                                width: float) -> np.ndarray:
+    """NumPy twin of :func:`thresholds_from_counts_dev` (bit-identical:
+    integer rank compare + the same f32 edge arithmetic)."""
+    C, B = counts.shape
+    n = np.asarray(cdf_len, np.int32)
+    r = np.asarray(rates, np.float32)
+    k = np.ceil(np.minimum(r, np.float32(1.0))
+                * n.astype(np.float32)).astype(np.int32)
+    k = np.clip(k, 1, np.maximum(n, 1))
+    cum = np.cumsum(counts, axis=-1, out=_scratch((C, B), counts.dtype))
+    below = np.less(cum, k[:, None], out=_scratch((C, B), bool))
+    b = np.minimum(below.sum(axis=-1).astype(np.int32), B - 1)
+    th = np.float32(lo) + (b + 1).astype(np.float32) * np.float32(width)
+    th[(n == 0) | (r <= 0.0)] = -np.inf
+    return th
+
+
 class UtilityCDF:
     def __init__(self, history: Optional[Iterable[float]] = None,
                  window: int = 4096):
@@ -141,4 +245,6 @@ class UtilityCDF:
 
 
 __all__ = ["UtilityCDF", "threshold_from_sorted",
-           "thresholds_from_lanes_dev", "thresholds_from_lanes_host"]
+           "thresholds_from_lanes_dev", "thresholds_from_lanes_host",
+           "thresholds_from_counts_dev", "thresholds_from_counts_host",
+           "bucket_index_dev", "bucket_index_host", "counts_from_ring_host"]

@@ -79,17 +79,20 @@ class StateGauge:
 
 
 class Histogram:
-    """Exact-sample histogram with a bounded buffer.
+    """Exact-sample histogram with a bounded ring buffer.
 
     Up to ``cap`` samples are stored verbatim (percentiles are exact);
-    past that, count/sum/min/max keep accumulating but new samples are
-    no longer retained — ``truncated`` in the summary says percentiles
-    cover only the first ``cap`` observations. Deliberately *not* a
-    randomized reservoir: determinism matters more here than tail
-    fidelity on multi-hour runs.
+    past that, count/sum/min/max keep accumulating while the ring
+    overwrites the oldest retained sample, so memory is bounded at
+    ``cap`` floats no matter how long the run and percentiles cover the
+    most recent ``cap`` observations — ``truncated`` plus ``window`` in
+    the summary flag that sliding coverage. Deliberately *not* a
+    randomized reservoir: determinism matters more here than whole-run
+    tail fidelity on multi-hour runs.
     """
 
-    __slots__ = ("name", "cap", "count", "total", "min", "max", "_vals")
+    __slots__ = ("name", "cap", "count", "total", "min", "max", "_vals",
+                 "_pos")
 
     def __init__(self, name: str, cap: int = 100_000) -> None:
         self.name = name
@@ -99,6 +102,7 @@ class Histogram:
         self.min = float("inf")
         self.max = float("-inf")
         self._vals: List[float] = []
+        self._pos = 0
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -110,6 +114,9 @@ class Histogram:
             self.max = v
         if len(self._vals) < self.cap:
             self._vals.append(v)
+        else:                       # ring-overwrite the oldest sample
+            self._vals[self._pos] = v
+            self._pos = (self._pos + 1) % self.cap
 
     def percentile(self, q: float) -> float:
         if not self._vals:
@@ -129,7 +136,9 @@ class Histogram:
         for q, v in zip(PCTS, pv):
             out[f"p{q:g}"] = float(v)
         if self.count > len(self._vals):
+            # percentiles cover the most recent `window` samples only
             out["truncated"] = True
+            out["window"] = len(self._vals)
         return out
 
 

@@ -26,8 +26,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Protocol, Tuple, \
+from typing import Any, Callable, Deque, List, Optional, Protocol, Tuple, \
     runtime_checkable
 
 import numpy as np
@@ -38,6 +39,7 @@ from repro.serve.fault import (
     BackendUnavailable,
     BreakerConfig,
     CircuitBreaker,
+    CLOSED,
     OPEN,
     RetryPolicy,
 )
@@ -176,6 +178,11 @@ class SenderWorker:
         # frames awaiting a retry slot: (ready_at, tiebreak, item, attempts)
         self._retry_q: List[Tuple[float, int, Any, int]] = []
         self._retry_seq = itertools.count()
+        # frames already popped by a batched refill, awaiting a token
+        # this same pump (a refill fetches at most ``free`` frames and
+        # every fetched frame consumes a pending slot before the loop
+        # can exit, so the deque is empty between pumps)
+        self._pending: Deque[Any] = deque()
 
     @property
     def pending_retries(self) -> int:
@@ -202,11 +209,27 @@ class SenderWorker:
         q = getattr(sess, "queue", None)      # bare LoadShedder surface
         return len(q) if q is not None else 0
 
-    def _next_item(self, now: float) -> Tuple[Optional[Any], int]:
+    def _next_item(self, now: float,
+                   want: int = 1) -> Tuple[Optional[Any], int]:
+        """The next frame to send: a ready retry first (exactly the
+        sequential loop's priority), else the pending batch, refilled
+        with ONE ``next_frames(want)`` pop when the session supports
+        batched transmission control (``want=1`` falls back to
+        ``next_frame``, as do bare LoadShedder-like sessions)."""
         if self._retry_q and self._retry_q[0][0] <= now:
             _, _, item, attempts = heapq.heappop(self._retry_q)
             return item, attempts
-        return self.session.next_frame(), 0
+        if not self._pending:
+            nf = getattr(self.session, "next_frames", None)
+            if nf is not None and want > 1:
+                self._pending.extend(nf(want))
+            else:
+                item = self.session.next_frame()
+                if item is not None:
+                    self._pending.append(item)
+        if self._pending:
+            return self._pending.popleft(), 0
+        return None, 0
 
     def pump(self, now: float) -> List[SendOutcome]:
         out: List[SendOutcome] = []
@@ -215,7 +238,12 @@ class SenderWorker:
         while self.free > 0:
             if self.breaker is not None and not self.breaker.can_send(now):
                 break
-            item, attempts = self._next_item(now)
+            # refill all free tokens in one batched pop — but only when
+            # the breaker (if any) is CLOSED; half-open probes send one
+            # frame at a time by design
+            batch = self.breaker is None or self.breaker.state == CLOSED
+            item, attempts = self._next_item(now,
+                                             self.free if batch else 1)
             if item is None:
                 break
             if self._expired(item, now):

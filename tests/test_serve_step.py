@@ -226,7 +226,7 @@ def test_step_matches_host_loop_reference():
     sessions = {
         serve: open_session(Query.single("red", latency_bound=1.0, fps=10.0),
                             num_cameras=C, train_utilities=hist,
-                            cdf_window=W, serve=serve)
+                            cdf_window=W, serve=serve, exact_tick=True)
         for serve in ("host", "device")}
     for step in range(6):
         lat = float(rng.uniform(0.5, 2.0) / (C * 10.0))
@@ -301,8 +301,11 @@ def test_admission_float32_boundary_consistency():
     th32 = np.nextafter(np.float32(0.5), np.float32(np.inf))
 
     def mk():
+        # exact_tick: the boundary value below is constructed from the
+        # exact sort quantile's nextafter threshold
         s = open_session(Query.single("red", latency_bound=1.0, fps=10.0),
-                         num_cameras=1, train_utilities=hist, cdf_window=128)
+                         num_cameras=1, train_utilities=hist, cdf_window=128,
+                         exact_tick=True)
         s.report_backend_latency(0.2)       # r = 0.5 -> threshold at 0.5
         s.tick()
         assert np.asarray(s.state.threshold)[0] == th32

@@ -168,7 +168,8 @@ def test_admit_matches_scalar_shedder_decisions(rng):
     us = rng.uniform(0, 1, (2, 40))
 
     sess = open_session(Query.single("red", latency_bound=1.0, fps=10.0),
-                        num_cameras=2, train_utilities=hist)
+                        num_cameras=2, train_utilities=hist,
+                        exact_tick=True)
     sess.report_backend_latency(0.2)                    # ST=5 -> r=0.5... per
     # lane: share = (1/0.2)/2 = 2.5 -> r = 1 - 2.5/10 = 0.75
     sess.tick()
@@ -226,7 +227,8 @@ def test_offer_lane_mapping_and_limit():
 def test_session_state_is_pytree():
     st = SessionState.fresh(3, 10)
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == 21          # incl. queue/churn/floor + s2 lanes
+    assert len(leaves) == 23          # incl. queue/churn/floor + s2 lanes
+    #                                   + the (C, bins) quantile counts
     st2 = jax.tree_util.tree_map(lambda x: x, st)
     assert isinstance(st2, SessionState)
     assert st2.bg.shape == (3, 10)
